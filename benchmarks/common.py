@@ -1,0 +1,49 @@
+"""Benchmark helpers: timing, CSV emission, scaled-down paper workloads.
+
+The container is a single CPU core, so every benchmark runs a *scaled*
+version of the paper's workload by default (the paper-scale datasets are
+selected with --full).  All timings are wall-clock medians over repeats with
+one warmup (jit) call excluded.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+import jax
+
+# scaled-down dataset sizes (paper sizes in comments)
+SCALED = {
+    "sports": 60_000,       # 999K
+    "lakes": 200_000,       # 8.4M
+    "synthetic": 400_000,   # 16M
+}
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+            **kw) -> float:
+    """Median wall time of fn(*args) in seconds; blocks on jax outputs."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or \
+            isinstance(out, jax.Array) else None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        if isinstance(out, jax.Array):
+            out.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """The harness-required CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def mesh1():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

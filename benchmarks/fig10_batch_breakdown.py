@@ -1,0 +1,58 @@
+"""Paper Fig 10: average per-batch timing breakdown — query transfer, kernel
+execution, result retrieval.
+
+The paper's point: in the broadcast design the kernel dominates each batch
+and communication is a thin slice.  Per-batch transfer volumes are exact
+(batch × 16 B queries in, batch × 4 B counts out); kernel time is measured;
+transfer times are modeled at UPMEM host-bandwidth and at TPU ICI bandwidth.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import engine, rtree
+from repro.data import datasets
+
+HOST_BW = 8e9
+ICI_BW = 50e9
+
+
+def run(full: bool = False) -> list[dict]:
+    name = "lakes"
+    n = None if full else common.SCALED[name]
+    rects = datasets.load(name, n=n)
+    queries = datasets.make_queries(rects, 0.05, seed=47)
+    mesh = common.mesh1()
+    b, f = rtree.choose_parameters(len(rects), 8)
+    tree = rtree.build_str_3level(rects, b, f)
+    eng = engine.BroadcastEngine(tree, mesh, batch_size=10_000)
+
+    batch = np.asarray(queries[:10_000], np.int32)
+    if batch.shape[0] < 10_000:
+        batch = np.concatenate([batch, np.tile(
+            [2**31 - 1, 2**31 - 1, -2**31, -2**31],
+            (10_000 - batch.shape[0], 1)).astype(np.int32)])
+    dev_batch = jax.device_put(batch, eng._rep_sh)
+    t_kernel = common.time_fn(
+        lambda: eng._step(eng.leaf_rects, eng.cover_mbrs, dev_batch))
+    q_bytes = batch.nbytes
+    r_bytes = batch.shape[0] * 4
+    t_q_upmem, t_r_upmem = q_bytes / HOST_BW, r_bytes / HOST_BW
+    t_q_tpu, t_r_tpu = q_bytes / ICI_BW, r_bytes / ICI_BW
+
+    common.emit("fig10/lakes/query_transfer", t_q_upmem,
+                f"bytes={q_bytes} tpu_s={t_q_tpu:.2e}")
+    common.emit("fig10/lakes/kernel", t_kernel,
+                f"fraction={t_kernel/(t_kernel+t_q_upmem+t_r_upmem):.3f}")
+    common.emit("fig10/lakes/result_retrieval", t_r_upmem,
+                f"bytes={r_bytes} tpu_s={t_r_tpu:.2e}")
+    return [dict(query_transfer_s=t_q_upmem, kernel_s=t_kernel,
+                 result_s=t_r_upmem)]
+
+
+if __name__ == "__main__":
+    run()

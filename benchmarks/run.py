@@ -1,0 +1,52 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default scale fits this
+container (scaled datasets, 1 device); ``--full`` selects paper-scale
+dataset sizes, and the dry-run/roofline cells are produced by
+``python -m repro.launch.dryrun --all`` (512 fake devices, separate process
+by design — benches must see one device)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale dataset sizes (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig8_strong_scaling, fig9_tile_sweep,
+                            fig10_batch_breakdown, table2_cpu_vs_pim,
+                            table3_broadcast_vs_subtree,
+                            table4_memory_profile, table5_energy)
+    benches = {
+        "table2": table2_cpu_vs_pim.run,
+        "table3": table3_broadcast_vs_subtree.run,
+        "table4": table4_memory_profile.run,
+        "table5": table5_energy.run,
+        "fig8": fig8_strong_scaling.run,
+        "fig9": fig9_tile_sweep.run,
+        "fig10": fig10_batch_breakdown.run,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        try:
+            benches[name](full=args.full)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

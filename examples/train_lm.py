@@ -1,0 +1,33 @@
+"""End-to-end training driver: train a ~100M-parameter llama-family model
+for a few hundred steps on the synthetic corpus, with checkpointing and
+auto-resume (kill it mid-run and re-run: it continues from the last step).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import llama3_2_1b
+from repro.train import train_loop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+# ~100M-parameter member of the llama3 family (assigned full config scaled
+# to container hardware; the full config trains via the same entry point on
+# a real mesh).
+cfg = dataclasses.replace(
+    llama3_2_1b.CONFIG, n_layers=4, d_model=512, n_heads=8, n_kv_heads=4,
+    head_dim=64, d_ff=2048, vocab=32_000, arch_id="llama3-100m")
+
+mesh = jax.make_mesh((1, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+res = train_loop.train(
+    cfg, mesh, steps=args.steps, batch_size=8, seq_len=256,
+    ckpt_dir=args.ckpt_dir, ckpt_every=100, lr=3e-4)
+print(f"loss: {res['losses'][0]:.3f} → {res['losses'][-1]:.3f} "
+      f"over {len(res['losses'])} steps")

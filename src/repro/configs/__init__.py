@@ -1,0 +1,60 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher.
+
+Each module defines ``CONFIG`` (the exact assigned configuration) and
+``SMOKE_CONFIG`` (a reduced same-family configuration for CPU smoke tests).
+The spatial-engine configs (the paper's own workloads) live in
+:mod:`repro.configs.rtree_paper` and are registered under ``rtree_*`` ids.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.base import ModelConfig
+
+ARCH_IDS = [
+    "recurrentgemma-2b",
+    "qwen2-vl-72b",
+    "minitron-8b",
+    "deepseek-coder-33b",
+    "llama3.2-1b",
+    "qwen2-1.5b",
+    "granite-moe-3b-a800m",
+    "qwen2-moe-a2.7b",
+    "whisper-medium",
+    "falcon-mamba-7b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+# (seq_len, global_batch, step kind)
+SHAPES = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    """long_500k runs only for sub-quadratic archs (SSM state / bounded
+    window); pure full-attention archs skip it (DESIGN.md Sec 4)."""
+    return cfg.family == "ssm" or (cfg.family == "hybrid" and cfg.window > 0)
+
+
+def cells(arch_id: str) -> list[str]:
+    cfg = get_config(arch_id)
+    out = []
+    for name in SHAPES:
+        if name == "long_500k" and not supports_long_context(cfg):
+            continue
+        out.append(name)
+    return out
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCH_IDS for s in cells(a)]

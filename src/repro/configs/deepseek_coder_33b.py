@@ -1,0 +1,16 @@
+"""deepseek-coder-33b — llama-architecture dense code model
+[arXiv:2401.14196; hf].  62L, d_model 7168, 56H GQA kv=8, d_ff 19200,
+vocab 32256."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-coder-33b", family="dense",
+    n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=19200,
+    vocab=32_256, head_dim=128, rope_theta=100_000.0,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    arch_id="deepseek-coder-33b-smoke", family="dense",
+    n_layers=2, d_model=56, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+    head_dim=14,
+)

@@ -1,0 +1,16 @@
+"""falcon-mamba-7b — attention-free mamba-1 SSM [arXiv:2410.05355;
+unverified].  64L, d_model 4096, d_inner 8192 (expand 2), ssm_state 16,
+conv 4, dt_rank 256, vocab 65024."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=1, n_kv_heads=1, d_ff=0,
+    vocab=65_024, ssm_state=16, ssm_conv=4, ssm_expand=2, dt_rank=256,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    arch_id="falcon-mamba-7b-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=1, n_kv_heads=1, d_ff=0, vocab=256,
+    ssm_state=4, ssm_conv=4, ssm_expand=2, dt_rank=8,
+)

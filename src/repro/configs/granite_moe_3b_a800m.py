@@ -1,0 +1,16 @@
+"""granite-moe-3b-a800m — fine-grained MoE, 40 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf].  32L, d_model 1536,
+24H GQA kv=8, per-expert d_ff 512, vocab 49155."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, d_ff=512,
+    vocab=49_155, head_dim=64, moe_experts=40, moe_top_k=8,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    arch_id="granite-moe-3b-a800m-smoke", family="moe",
+    n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, d_ff=32, vocab=256,
+    head_dim=12, moe_experts=8, moe_top_k=2,
+)

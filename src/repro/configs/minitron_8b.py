@@ -1,0 +1,16 @@
+"""minitron-8b — width-pruned nemotron dense transformer
+[arXiv:2407.14679; hf].  32L, d_model 4096, 32H GQA kv=8, d_ff 16384,
+vocab 256000."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="minitron-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=16384,
+    vocab=256_000, head_dim=128,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    arch_id="minitron-8b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+    head_dim=16,
+)

@@ -1,0 +1,15 @@
+"""qwen2-1.5b — dense GQA with QKV bias [arXiv:2407.10671; hf].
+28L, d_model 1536, 12H GQA kv=2, d_ff 8960, vocab 151936."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-1.5b", family="dense",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2, d_ff=8960,
+    vocab=151_936, head_dim=128, qkv_bias=True, rope_theta=1_000_000.0,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    arch_id="qwen2-1.5b-smoke", family="dense",
+    n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, d_ff=96, vocab=256,
+    head_dim=12, qkv_bias=True,
+)

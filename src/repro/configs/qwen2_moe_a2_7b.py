@@ -1,0 +1,18 @@
+"""qwen2-moe-a2.7b — 60 routed experts top-4 + 4 shared experts
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf].  24L, d_model 2048, 16H (kv=16 → MHA),
+per-expert d_ff 1408, shared hidden 5632, vocab 151936, QKV bias."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab=151_936, head_dim=128, qkv_bias=True,
+    moe_experts=60, moe_top_k=4, moe_shared_ff=5632,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    arch_id="qwen2-moe-a2.7b-smoke", family="moe",
+    n_layers=2, d_model=48, n_heads=4, n_kv_heads=4, d_ff=32, vocab=256,
+    head_dim=12, qkv_bias=True, moe_experts=8, moe_top_k=2,
+    moe_shared_ff=64,
+)

@@ -1,0 +1,18 @@
+"""qwen2-vl-72b — VLM backbone with M-RoPE and stubbed patch embeddings
+[arXiv:2409.12191; hf].  80L, d_model 8192, 64H GQA kv=8, d_ff 29568,
+vocab 152064, QKV bias, mrope sections (16, 24, 24)."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=29568,
+    vocab=152_064, head_dim=128, qkv_bias=True, rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24), num_patches=256,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    arch_id="qwen2-vl-72b-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab=256, head_dim=16, qkv_bias=True,
+    mrope_sections=(2, 3, 3), num_patches=4,
+)

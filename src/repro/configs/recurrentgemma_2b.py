@@ -1,0 +1,20 @@
+"""recurrentgemma-2b — RG-LRU + local attention hybrid, 1:2 attn:rec ratio
+[arXiv:2402.19427; hf].  26L, d_model 2560, 10 heads (MQA kv=1, head_dim
+256), GeGLU d_ff 7680, vocab 256000, window 2048."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, d_ff=7680,
+    vocab=256_000, head_dim=256, act="gelu", glu=True,
+    block_pattern=("rec", "rec", "attn"), window=2048, lru_width=2560,
+    conv_width=4, rope_theta=10_000.0,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    arch_id="recurrentgemma-2b-smoke", family="hybrid",
+    n_layers=5, d_model=64, n_heads=4, n_kv_heads=1, d_ff=128,
+    vocab=256, head_dim=16, act="gelu", glu=True,
+    block_pattern=("rec", "rec", "attn"), window=16, lru_width=64,
+    conv_width=4,
+)

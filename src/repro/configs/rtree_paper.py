@@ -1,0 +1,35 @@
+"""Spatial-engine configurations — the paper's own workloads (Table I).
+
+These are registered alongside the LM architectures so the spatial engine is
+a first-class citizen of the launcher/dry-run/roofline tooling.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialConfig:
+    name: str
+    num_rects: int
+    dataset: str             # repro.data.datasets key
+    query_fractions: tuple = (0.01, 0.05, 0.10, 0.25)
+    batch_size: int = 10_000  # paper: query batches of up to 10,000
+    leaf_capacity: int = 0    # 0 → choose_parameters()
+    fanout: int = 0
+    kernel_tq: int = 512
+    kernel_tr: int = 1024
+
+
+SPORTS = SpatialConfig(name="rtree_sports", num_rects=999_000,
+                       dataset="sports")
+LAKES = SpatialConfig(name="rtree_lakes", num_rects=8_400_000,
+                      dataset="lakes")
+SYNTH16M = SpatialConfig(name="rtree_synth16m", num_rects=16_000_000,
+                         dataset="synthetic")
+
+SPATIAL_CONFIGS = {c.name: c for c in (SPORTS, LAKES, SYNTH16M)}
+
+
+def get_spatial_config(name: str) -> SpatialConfig:
+    return SPATIAL_CONFIGS[name]

@@ -1,0 +1,18 @@
+"""whisper-medium — encoder-decoder audio backbone, conv frontend stubbed
+[arXiv:2212.04356; unverified].  24+24L, d_model 1024, 16H MHA, d_ff 4096,
+vocab 51865, 1500 encoder frames."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-medium", family="encdec",
+    n_layers=24, enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=51_865, head_dim=64, act="gelu", glu=False,
+    enc_frames=1500, norm_eps=1e-5,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    arch_id="whisper-medium-smoke", family="encdec",
+    n_layers=2, enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=256, head_dim=16, act="gelu", glu=False,
+    enc_frames=16, norm_eps=1e-5,
+)

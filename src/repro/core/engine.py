@@ -1,0 +1,232 @@
+"""Broadcast PIM R-tree engine on a TPU mesh (paper Section III-C).
+
+The paper's CPU→DPU pipeline, re-expressed in JAX SPMD:
+
+==========================  =================================================
+paper (UPMEM)               this engine (TPU mesh)
+==========================  =================================================
+host builds STR tree        :func:`repro.core.rtree.build_str_3level` (numpy)
+BFS serialization           structure-of-arrays, leaf level contiguous
+broadcast upper headers     replicated operand — ``PartitionSpec()``
+scatter leaf slices         leaf arrays sharded over *all* mesh axes, axis 0;
+                            contiguous BFS slices == the paper's partitions
+broadcast query batch       replicated operand, fixed batch size (≤10k)
+DPU two-phase kernel        shard_map body: Phase-1 mask from the covering
+                            level-1 MBRs, Phase-2 Pallas tile-scan kernel
+host aggregates counts      ``jax.lax.psum`` over the mesh (on-fabric; a
+                            beyond-paper improvement — flagged in DESIGN.md)
+==========================  =================================================
+
+Per-device Phase-1 neighborhoods: device ``d`` holds the contiguous leaf
+slice ``[d·Lp, (d+1)·Lp)``; its covering level-1 nodes are those whose child
+ranges intersect the slice — the paper's "candidate level-1 nodes are
+determined by the DPU index", giving O(1) upper-level filtering per query.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import EMPTY_RECT, SerializedRTree
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+DEFAULT_BATCH = 10_000  # paper: "queries are processed in batches of up to 10,000"
+
+
+def _mesh_device_count(mesh: jax.sharding.Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLayout:
+    """Host-computed device layout: leaf slices and covering L1 headers."""
+
+    leaf_rects_flat: np.ndarray   # (D * R_loc, 4) int32, EMPTY-padded
+    cover_mbrs: np.ndarray        # (D, Kmax, 4) int32, EMPTY-padded
+    num_devices: int
+    rects_per_device: int
+    kmax: int
+    leaves_per_device: int
+
+    @property
+    def leaf_bytes(self) -> int:
+        return self.leaf_rects_flat.nbytes
+
+    @property
+    def header_bytes(self) -> int:
+        return self.cover_mbrs.nbytes // self.num_devices  # broadcast once
+
+
+def shard_tree(tree: SerializedRTree, num_devices: int) -> ShardedLayout:
+    """Partition the BFS leaf level into contiguous per-device slices and
+    compute each device's covering level-1 MBR neighborhood."""
+    d = int(num_devices)
+    leaf_rects = np.asarray(tree.leaf_rects)           # (L, B, 4)
+    l, b, _ = leaf_rects.shape
+    lp = math.ceil(l / d)
+    pad = d * lp - l
+    if pad:
+        leaf_rects = np.concatenate(
+            [leaf_rects, np.tile(EMPTY_RECT, (pad, b, 1))], axis=0
+        )
+    flat = leaf_rects.reshape(d * lp * b, 4)
+
+    starts = np.asarray(tree.l1_child_start, dtype=np.int64)
+    counts = np.asarray(tree.l1_child_count, dtype=np.int64)
+    ends = starts + counts
+    l1_mbrs = np.asarray(tree.l1_mbrs)
+    covers = []
+    for dev in range(d):
+        s, e = dev * lp, min((dev + 1) * lp, l)
+        # level-1 nodes whose child leaf range intersects [s, e)
+        hit = (starts < e) & (ends > s)
+        covers.append(l1_mbrs[hit])
+    kmax = max(1, max(c.shape[0] for c in covers))
+    cover_mbrs = np.tile(EMPTY_RECT, (d, kmax, 1))
+    for dev, c in enumerate(covers):
+        cover_mbrs[dev, : c.shape[0]] = c
+    return ShardedLayout(
+        leaf_rects_flat=flat.astype(np.int32),
+        cover_mbrs=cover_mbrs.astype(np.int32),
+        num_devices=d,
+        rects_per_device=lp * b,
+        kmax=kmax,
+        leaves_per_device=lp,
+    )
+
+
+def make_query_step(
+    mesh: jax.sharding.Mesh,
+    *,
+    impl: str = ops.DEFAULT_IMPL,
+    tq: int = 512,
+    tr: int = 1024,
+):
+    """Build the jitted SPMD query step for ``mesh``.
+
+    Returns ``step(leaf_rects_flat, cover_mbrs, queries) -> counts`` where
+    the leaf array is sharded over all mesh axes, headers are sharded
+    one-row-per-device, and queries/counts are replicated.  This function is
+    what the multi-pod dry-run lowers and compiles.
+    """
+    axes = tuple(mesh.axis_names)
+    p_leaf = jax.sharding.PartitionSpec(axes)
+    p_cover = jax.sharding.PartitionSpec(axes)
+    p_rep = jax.sharding.PartitionSpec()
+
+    def shard_fn(local_rects, local_cover, queries):
+        cover = local_cover.reshape(-1, 4)              # (Kmax, 4)
+        # Phase 1: upper-level filtering against the covering L1 MBRs
+        # (WRAM-resident metadata in the paper; VMEM/registers here).
+        m = kref.rect_overlap(queries[:, None, :], cover[None, :, :])
+        mask = m.any(axis=1)
+        # Phase 2: local leaf scan with tile-MBR pruning.
+        counts = ops.overlap_counts(
+            queries, local_rects, mask, impl=impl, tq=tq, tr=tr
+        )
+        # Host aggregation in the paper; on-fabric psum here.
+        return jax.lax.psum(counts, axes)
+
+    fn = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(p_leaf, p_cover, p_rep),
+        out_specs=p_rep,
+        check_vma=False,  # Pallas calls don't carry varying-mesh-axis info
+    )
+    return jax.jit(fn)
+
+
+def morton_order(rects: np.ndarray, shift: int = 12) -> np.ndarray:
+    """Morton (Z-curve) ordering of rect centres — beyond-paper §Perf S2:
+    spatially coherent query batches make query-tile MBRs tight, so the
+    kernel's tile-MBR pruning (and the scalar-prefetch kernel's DMA skip)
+    fires; measured 6.7× fewer active (query-tile × rect-tile) pairs on the
+    lakes workload vs arrival order."""
+    r = rects.astype(np.int64)
+    cx = (((r[:, 0] + r[:, 2]) // 2) >> shift).astype(np.uint64)
+    cy = (((r[:, 1] + r[:, 3]) // 2) >> shift).astype(np.uint64)
+    code = np.zeros(len(rects), np.uint64)
+    for i in range(10):
+        code |= ((cx >> np.uint64(i)) & np.uint64(1)) << np.uint64(2 * i)
+        code |= ((cy >> np.uint64(i)) & np.uint64(1)) << np.uint64(2 * i + 1)
+    return np.argsort(code, kind="stable")
+
+
+class BroadcastEngine:
+    """End-to-end broadcast engine: host build → device placement → batched
+    queries.  Mirrors the paper's Fig. 3 workflow.  ``sort_queries`` applies
+    Morton ordering per batch (counts are un-permuted on return)."""
+
+    def __init__(
+        self,
+        tree: SerializedRTree,
+        mesh: jax.sharding.Mesh,
+        *,
+        impl: str = ops.DEFAULT_IMPL,
+        tq: int = 512,
+        tr: int = 1024,
+        batch_size: int = DEFAULT_BATCH,
+        sort_queries: bool = False,
+    ):
+        self.mesh = mesh
+        self.batch_size = int(batch_size)
+        self.sort_queries = sort_queries
+        self.num_devices = _mesh_device_count(mesh)
+        self.layout = shard_tree(tree, self.num_devices)
+
+        axes = tuple(mesh.axis_names)
+        leaf_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(axes))
+        rep_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        # one-time placement: leaf scatter + header broadcast (paper Sec III-C.3)
+        self.leaf_rects = jax.device_put(self.layout.leaf_rects_flat, leaf_sh)
+        self.cover_mbrs = jax.device_put(self.layout.cover_mbrs, leaf_sh)
+        self._rep_sh = rep_sh
+        self._step = make_query_step(mesh, impl=impl, tq=tq, tr=tr)
+
+    def query(self, queries: np.ndarray) -> np.ndarray:
+        """Batched range-query counts (paper Sec III-C.4/5)."""
+        queries = np.asarray(queries, dtype=np.int32)
+        if self.sort_queries:
+            order = morton_order(queries)
+            inv = np.argsort(order, kind="stable")
+            return self._query_inner(queries[order])[inv]
+        return self._query_inner(queries)
+
+    def _query_inner(self, queries: np.ndarray) -> np.ndarray:
+        q = queries.shape[0]
+        bs = self.batch_size
+        out = np.empty(q, dtype=np.int32)
+        for lo in range(0, q, bs):
+            hi = min(lo + bs, q)
+            batch = queries[lo:hi]
+            if hi - lo < bs:  # pad the tail batch to keep one compiled shape
+                batch = np.concatenate(
+                    [batch, np.tile(EMPTY_RECT, (bs - (hi - lo), 1))]
+                )
+            dev_batch = jax.device_put(batch, self._rep_sh)
+            counts = self._step(self.leaf_rects, self.cover_mbrs, dev_batch)
+            out[lo:hi] = np.asarray(counts)[: hi - lo]
+        return out
+
+    # ---- communication-volume model (paper Figs. 7/10, Table III) --------
+    def transfer_stats(self, num_queries: int) -> dict[str, int]:
+        """Bytes moved host→device / device→host under the paper's model.
+
+        broadcast: headers once; leaves scatter once; queries broadcast per
+        batch; results one count per query (fabric-reduced)."""
+        nb = math.ceil(num_queries / self.batch_size)
+        return {
+            "header_broadcast_bytes": self.layout.header_bytes,
+            "leaf_scatter_bytes": self.layout.leaf_bytes,
+            "query_broadcast_bytes": nb * self.batch_size * 16,
+            "result_bytes": num_queries * 4,
+            "per_batch_bytes": self.batch_size * 16,
+        }

@@ -1,0 +1,274 @@
+"""Host-side R-tree construction, exactly as in the paper.
+
+Two builders:
+
+* :func:`build_str_3level` — bottom-up Sort-Tile-Recursive (STR) bulk loading
+  (Leutenegger et al.) constrained to exactly three levels (root, level-1
+  internal nodes, leaves), serialized breadth-first into a pointer-free
+  structure-of-arrays (:class:`~repro.core.types.SerializedRTree`).  This is
+  the index used by the Broadcast PIM engine (paper Section III-C).
+
+* :func:`build_fanout_constrained` — the paper's Algorithm 2: a top-down,
+  STR-inspired recursive build whose *root* fanout is capped at the number of
+  devices so each root child becomes one per-device subtree.  Used by the
+  subtree-partitioned baseline (paper Section III-B).
+
+Construction is a host-side, one-time preprocessing cost (numpy), exactly as
+the paper performs it on the CPU before transferring to DPUs.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.types import EMPTY_RECT, SerializedRTree, TopDownNode, mbr_of
+
+
+def _validate_rects(rects: np.ndarray) -> np.ndarray:
+    rects = np.asarray(rects, dtype=np.int32)
+    if rects.ndim != 2 or rects.shape[1] != 4:
+        raise ValueError(f"rects must be (N, 4), got {rects.shape}")
+    if rects.shape[0] == 0:
+        raise ValueError("cannot build an R-tree over zero rectangles")
+    bad = (rects[:, 0] > rects[:, 2]) | (rects[:, 1] > rects[:, 3])
+    if bad.any():
+        raise ValueError(f"{int(bad.sum())} rects have min > max")
+    return rects
+
+
+def _centers(rects: np.ndarray) -> np.ndarray:
+    # Midpoints; int64 intermediate avoids overflow on extreme coordinates.
+    r = rects.astype(np.int64)
+    return np.stack([(r[:, 0] + r[:, 2]) // 2, (r[:, 1] + r[:, 3]) // 2], axis=1)
+
+
+def str_pack(rects: np.ndarray, capacity: int) -> np.ndarray:
+    """One STR packing pass: returns ``order`` such that consecutive groups of
+    ``capacity`` rows of ``rects[order]`` form the packed nodes.
+
+    Sort by x-centre, cut into ``ceil(sqrt(ceil(N/capacity)))`` vertical
+    slices of whole nodes, then sort each slice by y-centre (paper
+    Section III-C.1).
+    """
+    n = rects.shape[0]
+    num_nodes = math.ceil(n / capacity)
+    num_slices = math.ceil(math.sqrt(num_nodes))
+    slice_rects = math.ceil(num_nodes / num_slices) * capacity
+
+    c = _centers(rects)
+    by_x = np.argsort(c[:, 0], kind="stable")
+    order = np.empty(n, dtype=np.int64)
+    for s in range(num_slices):
+        lo, hi = s * slice_rects, min((s + 1) * slice_rects, n)
+        if lo >= hi:
+            continue
+        idx = by_x[lo:hi]
+        by_y = np.argsort(c[idx, 1], kind="stable")
+        order[lo:hi] = idx[by_y]
+    return order
+
+
+def choose_parameters(n: int, num_devices: int) -> tuple[int, int]:
+    """Pick (BUNDLEFACTOR, FANOUT) giving exactly three levels with at least
+    one leaf per device and a compact broadcast prefix.
+
+    The paper selects B and F "such that the resulting R-tree has exactly
+    three levels" with the upper two levels small enough to broadcast into
+    WRAM.  We target: leaves L = ceil(N/B) >= num_devices (so the contiguous
+    leaf partition gives every device work) and level-1 count
+    C1 = ceil(L/F) in the low hundreds (compact replicated header).
+    """
+    b = max(1, min(256, math.ceil(n / max(num_devices * 8, 64))))
+    b = min(b, max(1, n // num_devices))  # leaves >= num_devices when n allows
+    leaves = math.ceil(n / b)
+    f = max(2, math.ceil(leaves / 256))
+    if math.ceil(leaves / f) < 1:
+        f = leaves
+    return b, f
+
+
+def build_str_3level(
+    rects: np.ndarray, leaf_capacity: int, fanout: int
+) -> SerializedRTree:
+    """Bottom-up STR bulk load into an exactly-three-level tree, BFS-serialized.
+
+    Leaf level: STR pack rects with capacity ``leaf_capacity`` (B).
+    Level 1:    STR pack leaf MBRs with capacity ``fanout`` (F).
+    Root:       single node over all level-1 MBRs.
+
+    The returned SoA is the breadth-first serialization: level-1 nodes in
+    packed order, then all leaves; children of level-1 node ``i`` are the
+    contiguous leaf range starting at ``l1_child_start[i]`` — the layout the
+    paper broadcasts (prefix) and partitions (leaf level).
+    """
+    rects = _validate_rects(rects)
+    n = rects.shape[0]
+    b, f = int(leaf_capacity), int(fanout)
+    if b < 1 or f < 1:
+        raise ValueError("leaf_capacity and fanout must be positive")
+
+    # --- leaf level ---------------------------------------------------------
+    order = str_pack(rects, b)
+    packed = rects[order]
+    num_leaves = math.ceil(n / b)
+    leaf_rects = np.tile(EMPTY_RECT, (num_leaves, b, 1))
+    leaf_counts = np.zeros(num_leaves, dtype=np.int32)
+    for j in range(num_leaves):
+        lo, hi = j * b, min((j + 1) * b, n)
+        leaf_rects[j, : hi - lo] = packed[lo:hi]
+        leaf_counts[j] = hi - lo
+    valid = leaf_counts > 0
+    leaf_mbrs = np.tile(EMPTY_RECT, (num_leaves, 1))
+    for j in range(num_leaves):
+        if leaf_counts[j]:
+            leaf_mbrs[j] = mbr_of(leaf_rects[j, : leaf_counts[j]])
+    assert valid.all(), "STR packing must not create empty leaves"
+
+    # --- level 1: STR over leaf MBRs ---------------------------------------
+    l1_order = str_pack(leaf_mbrs, f)
+    # Re-order the leaf level so each level-1 node's children are contiguous
+    # in the serialized leaf array (BFS contiguity).
+    leaf_rects = leaf_rects[l1_order]
+    leaf_counts = leaf_counts[l1_order]
+    leaf_mbrs = leaf_mbrs[l1_order]
+
+    num_l1 = math.ceil(num_leaves / f)
+    l1_mbrs = np.tile(EMPTY_RECT, (num_l1, 1))
+    l1_child_start = np.zeros(num_l1, dtype=np.int32)
+    l1_child_count = np.zeros(num_l1, dtype=np.int32)
+    for i in range(num_l1):
+        lo, hi = i * f, min((i + 1) * f, num_leaves)
+        l1_child_start[i] = lo
+        l1_child_count[i] = hi - lo
+        l1_mbrs[i] = mbr_of(leaf_mbrs[lo:hi])
+
+    root_mbr = mbr_of(l1_mbrs)
+    return SerializedRTree(
+        root_mbr=root_mbr,
+        l1_mbrs=l1_mbrs,
+        l1_child_start=l1_child_start,
+        l1_child_count=l1_child_count,
+        leaf_mbrs=leaf_mbrs,
+        leaf_counts=leaf_counts,
+        leaf_rects=leaf_rects,
+    )
+
+
+def to_sn_records(tree: SerializedRTree) -> np.ndarray:
+    """Flatten to the paper's literal SN record layout for fidelity tests.
+
+    Record: [isLeaf, count, mbr(4), children(F) or first rect coords…] — we
+    emit a structured array with separate fields instead of a byte blob, in
+    BFS order: root, level-1 nodes, leaves.  ``leaf level start == 1 +
+    SN[0].count`` holds by construction.
+    """
+    f = int(tree.l1_child_count.max()) if tree.num_l1 else 0
+    b = tree.leaf_capacity
+    width = max(f, tree.num_l1, 1)  # root fanout may exceed F
+    dtype = np.dtype(
+        [
+            ("isLeaf", np.int32),
+            ("count", np.int32),
+            ("mbr", np.int32, (4,)),
+            ("children", np.int32, (width,)),
+            ("rects", np.int32, (max(b, 1), 4)),
+        ]
+    )
+    k = 1 + tree.num_l1 + tree.num_leaves
+    sn = np.zeros(k, dtype=dtype)
+    leaf_base = 1 + tree.num_l1
+    # root: children are the level-1 node indices 1..num_l1.
+    sn[0]["isLeaf"] = 0
+    sn[0]["count"] = tree.num_l1
+    sn[0]["mbr"] = tree.root_mbr
+    sn[0]["children"][: tree.num_l1] = 1 + np.arange(tree.num_l1)
+    for i in range(tree.num_l1):
+        rec = sn[1 + i]
+        rec["isLeaf"] = 0
+        rec["count"] = tree.l1_child_count[i]
+        rec["mbr"] = tree.l1_mbrs[i]
+        cs = int(tree.l1_child_start[i])
+        cc = int(tree.l1_child_count[i])
+        rec["children"][:cc] = leaf_base + cs + np.arange(cc)
+    for j in range(tree.num_leaves):
+        rec = sn[leaf_base + j]
+        rec["isLeaf"] = 1
+        rec["count"] = tree.leaf_counts[j]
+        rec["mbr"] = tree.leaf_mbrs[j]
+        rec["rects"][: b or 1] = tree.leaf_rects[j]
+    return sn
+
+
+# ---------------------------------------------------------------------------
+# Paper Algorithm 2: fanout-constrained top-down build (subtree baseline).
+# ---------------------------------------------------------------------------
+
+
+def build_fanout_constrained(
+    rects: np.ndarray, num_devices: int, leaf_capacity: int
+) -> TopDownNode:
+    """Fanout-constrained R-tree creation (paper Algorithm 2).
+
+    ``k = min(P, ceil(|R|/B))`` children at every internal node; groups formed
+    by x-centre slabs then y-centre partitioning (STR-style spatial ordering).
+    The root's children are assigned one-subtree-per-device by the subtree
+    baseline engine.
+    """
+    rects = _validate_rects(rects)
+    b, p = int(leaf_capacity), int(num_devices)
+
+    def build(r: np.ndarray) -> TopDownNode:
+        if r.shape[0] <= b:
+            return TopDownNode(mbr=mbr_of(r), is_leaf=True, rects=r)
+        k = min(p, math.ceil(r.shape[0] / b))
+        if k <= 1:
+            # degenerate fanout (P == 1): the subtree is a single flat leaf
+            return TopDownNode(mbr=mbr_of(r), is_leaf=True, rects=r)
+        num_slabs = math.ceil(math.sqrt(k))
+        # distribute exactly k groups across slabs (sum over slabs == k)
+        base, rem = divmod(k, num_slabs)
+        slab_groups = [base + (1 if s < rem else 0) for s in range(num_slabs)]
+        c = _centers(r)
+        by_x = np.argsort(c[:, 0], kind="stable")
+        children = []
+        pos = 0
+        n_r = r.shape[0]
+        for s in range(num_slabs):
+            # slab size proportional to its group share
+            take = math.ceil(n_r * slab_groups[s] / k)
+            idx = by_x[pos : min(pos + take, n_r)]
+            pos += take
+            if idx.size == 0:
+                continue
+            by_y = idx[np.argsort(c[idx, 1], kind="stable")]
+            group_size = math.ceil(by_y.size / slab_groups[s])
+            for g in range(slab_groups[s]):
+                gidx = by_y[g * group_size : (g + 1) * group_size]
+                if gidx.size == 0:
+                    continue
+                children.append(build(r[gidx]))
+        return TopDownNode(
+            mbr=mbr_of(np.stack([ch.mbr for ch in children])),
+            is_leaf=False,
+            rects=None,
+            children=tuple(children),
+        )
+
+    return build(rects)
+
+
+def subtree_partitions(root: TopDownNode, num_devices: int) -> list[TopDownNode]:
+    """Assign the root's children one-per-device (paper Algorithm 2, line 12).
+
+    If the tree has fewer root children than devices, the trailing devices get
+    empty placeholder subtrees (they simply report zero counts), mirroring
+    idle DPUs.
+    """
+    subs = list(root.children) if not root.is_leaf else [root]
+    if len(subs) > num_devices:
+        raise ValueError(
+            f"root fanout {len(subs)} exceeds device count {num_devices}; "
+            "build with num_devices >= root fanout"
+        )
+    return subs

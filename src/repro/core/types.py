@@ -1,0 +1,137 @@
+"""Core datatypes for the PIM R-tree engines.
+
+Coordinates are fixed-precision int32 throughout, matching the paper's
+conversion of all datasets to 32-bit integers ("UPMEM PIM hardware ... does
+not efficiently support floating-point operations"). A rectangle is a row
+``[xmin, ymin, xmax, ymax]``; two rectangles overlap iff their closed
+intervals intersect in both dimensions. Empty/padding slots use a sentinel
+rectangle with ``xmin > xmax`` so every overlap test against it fails.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+INT32_MAX = np.int32(2**31 - 1)
+INT32_MIN = np.int32(-(2**31))
+
+# Sentinel rectangle: fails every overlap test (xmin > xmax, ymin > ymax).
+EMPTY_RECT = np.array([INT32_MAX, INT32_MAX, INT32_MIN, INT32_MIN], dtype=np.int32)
+
+
+def rect_overlap_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Vectorised closed-interval overlap test between broadcastable rect arrays."""
+    return (
+        (a[..., 0] <= b[..., 2])
+        & (b[..., 0] <= a[..., 2])
+        & (a[..., 1] <= b[..., 3])
+        & (b[..., 1] <= a[..., 3])
+    )
+
+
+def mbr_of(rects: np.ndarray) -> np.ndarray:
+    """Minimum bounding rectangle of a (..., 4) rect array (ignores sentinels only
+    if none present; callers pass valid rects)."""
+    return np.concatenate(
+        [rects[..., :2].min(axis=-2), rects[..., 2:].max(axis=-2)], axis=-1
+    ).astype(np.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SerializedRTree:
+    """Exactly-three-level STR R-tree in breadth-first, pointer-free layout.
+
+    Structure-of-arrays form of the paper's ``SN`` record array: the BFS index
+    of the root is 0, level-1 node ``i`` is ``1 + i``, and leaf ``j`` is
+    ``1 + num_l1 + j`` — so the leaf level begins at ``1 + root.count``, as in
+    the paper (Section III-C.2). Children of level-1 node ``i`` are the
+    contiguous leaf range ``[l1_child_start[i], l1_child_start[i] +
+    l1_child_count[i])``, which is what makes contiguous leaf slicing across
+    devices equivalent to the paper's per-DPU leaf partitions.
+    """
+
+    root_mbr: Any      # (4,) int32
+    l1_mbrs: Any       # (C1, 4) int32
+    l1_child_start: Any  # (C1,) int32 — first leaf index of the child range
+    l1_child_count: Any  # (C1,) int32
+    leaf_mbrs: Any     # (L, 4) int32
+    leaf_counts: Any   # (L,) int32 — valid rects per leaf
+    leaf_rects: Any    # (L, B, 4) int32, padded with EMPTY_RECT
+
+    def tree_flatten(self):
+        children = (
+            self.root_mbr,
+            self.l1_mbrs,
+            self.l1_child_start,
+            self.l1_child_count,
+            self.leaf_mbrs,
+            self.leaf_counts,
+            self.leaf_rects,
+        )
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def num_l1(self) -> int:
+        return self.l1_mbrs.shape[0]
+
+    @property
+    def num_leaves(self) -> int:
+        return self.leaf_mbrs.shape[0]
+
+    @property
+    def leaf_capacity(self) -> int:
+        return self.leaf_rects.shape[1]
+
+    @property
+    def num_rects(self) -> int:
+        return int(np.asarray(self.leaf_counts).sum())
+
+    def total_bytes(self) -> int:
+        """Serialized size — used by the communication-volume model."""
+        return sum(
+            int(np.asarray(x).size) * 4
+            for x in jax.tree_util.tree_leaves(self)
+        )
+
+    def header_bytes(self) -> int:
+        """Bytes of the broadcast prefix (root + level-1 headers only)."""
+        return 4 * (4 + self.num_l1 * (4 + 1 + 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopDownNode:
+    """Node of the fanout-constrained top-down tree (paper Algorithm 2).
+
+    Used by the subtree-partitioned PIM baseline: the root's children are the
+    per-DPU subtrees.
+    """
+
+    mbr: np.ndarray                  # (4,) int32
+    is_leaf: bool
+    rects: np.ndarray | None         # (n, 4) for leaves
+    children: tuple["TopDownNode", ...] = ()
+
+    def count_nodes(self) -> int:
+        return 1 + sum(c.count_nodes() for c in self.children)
+
+    def count_rects(self) -> int:
+        if self.is_leaf:
+            return len(self.rects)
+        return sum(c.count_rects() for c in self.children)
+
+    def serialized_bytes(self) -> int:
+        """Approximate serialized size following the paper's SN struct:
+        isLeaf + count + MBR + children indices + rect payload."""
+        own = 4 * (1 + 1 + 4) + 4 * len(self.children)
+        if self.is_leaf:
+            own += 16 * len(self.rects)
+        return own + sum(c.serialized_bytes() for c in self.children)

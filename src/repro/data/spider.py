@@ -1,0 +1,141 @@
+"""SPIDER-style synthetic spatial data generation.
+
+Reimplements the rectangle distributions of the SPIDER spatial data generator
+(Katiyar et al., https://spider.cs.ucr.edu/ — used by the paper for its 16M
+rectangle / 3.99M query synthetic workload).  The container is offline, so we
+generate from the published distribution definitions: uniform, gaussian,
+diagonal, bit, sierpinski and parcel.  All outputs use the paper's
+fixed-precision int32 coordinate scheme: float coordinates in [0, 1] scaled
+by ``SCALE`` and rounded.
+
+Every generator is deterministic in its seed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+SCALE = 1_000_000  # fixed-precision scaling: 1e6 ticks over the unit square
+
+
+def _to_int_rects(cx, cy, w, h) -> np.ndarray:
+    """Clip centre/size float arrays to the unit square and convert to int32
+    corner rects [xmin, ymin, xmax, ymax]."""
+    x0 = np.clip(cx - w / 2, 0.0, 1.0)
+    y0 = np.clip(cy - h / 2, 0.0, 1.0)
+    x1 = np.clip(cx + w / 2, 0.0, 1.0)
+    y1 = np.clip(cy + h / 2, 0.0, 1.0)
+    r = np.stack([x0, y0, x1, y1], axis=1)
+    r = np.round(r * SCALE).astype(np.int32)
+    # enforce min <= max after rounding
+    r[:, 2] = np.maximum(r[:, 2], r[:, 0])
+    r[:, 3] = np.maximum(r[:, 3], r[:, 1])
+    return r
+
+
+def _sizes(rng: np.random.Generator, n: int, max_size: float) -> tuple:
+    w = rng.uniform(0.0, max_size, n)
+    h = rng.uniform(0.0, max_size, n)
+    return w, h
+
+
+def uniform(n: int, seed: int = 0, max_size: float = 0.001) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    cx, cy = rng.uniform(0, 1, n), rng.uniform(0, 1, n)
+    return _to_int_rects(cx, cy, *_sizes(rng, n, max_size))
+
+
+def gaussian(n: int, seed: int = 0, max_size: float = 0.001) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    cx = np.clip(rng.normal(0.5, 0.1, n), 0, 1)
+    cy = np.clip(rng.normal(0.5, 0.1, n), 0, 1)
+    return _to_int_rects(cx, cy, *_sizes(rng, n, max_size))
+
+
+def diagonal(
+    n: int, seed: int = 0, percentage: float = 0.5, buffer: float = 0.5,
+    max_size: float = 0.001,
+) -> np.ndarray:
+    """SPIDER diagonal: `percentage` of points exactly on the diagonal, the
+    rest displaced by a normal with sd = buffer/5."""
+    rng = np.random.default_rng(seed)
+    on_diag = rng.uniform(0, 1, n) < percentage
+    base = rng.uniform(0, 1, n)
+    disp = rng.normal(0, buffer / 5, n) / np.sqrt(2.0)
+    cx = np.where(on_diag, base, np.clip(base + disp, 0, 1))
+    cy = np.where(on_diag, base, np.clip(base - disp, 0, 1))
+    return _to_int_rects(cx, cy, *_sizes(rng, n, max_size))
+
+
+def bit(
+    n: int, seed: int = 0, probability: float = 0.2, digits: int = 10,
+    max_size: float = 0.001,
+) -> np.ndarray:
+    """SPIDER bit distribution: each of `digits` binary fraction bits set with
+    `probability` — produces clustered, axis-aligned banding."""
+    rng = np.random.default_rng(seed)
+
+    def coord():
+        bits = rng.uniform(0, 1, (n, digits)) < probability
+        weights = 0.5 ** np.arange(1, digits + 1)
+        return bits @ weights
+
+    return _to_int_rects(coord(), coord(), *_sizes(rng, n, max_size))
+
+
+def sierpinski(n: int, seed: int = 0, max_size: float = 0.001) -> np.ndarray:
+    """Chaos-game Sierpinski triangle (SPIDER's fractal distribution)."""
+    rng = np.random.default_rng(seed)
+    verts = np.array([[0.0, 0.0], [1.0, 0.0], [0.5, np.sqrt(3) / 2]])
+    choices = rng.integers(0, 3, size=n + 32)
+    pts = np.empty((n + 32, 2))
+    p = np.array([0.1, 0.1])
+    for i, c in enumerate(choices):
+        p = (p + verts[c]) / 2.0
+        pts[i] = p
+    pts = pts[32:]  # burn-in
+    return _to_int_rects(pts[:, 0], pts[:, 1], *_sizes(rng, n, max_size))
+
+
+def parcel(
+    n: int, seed: int = 0, split_range: float = 0.5, dither: float = 0.1
+) -> np.ndarray:
+    """SPIDER parcel: recursive binary space partition into n boxes, each
+    dithered — models cadastral/land-parcel data (non-overlapping tiling)."""
+    rng = np.random.default_rng(seed)
+    boxes = [(0.0, 0.0, 1.0, 1.0)]
+    while len(boxes) < n:
+        x0, y0, x1, y1 = boxes.pop(0)
+        w, h = x1 - x0, y1 - y0
+        frac = rng.uniform(split_range, 1.0 - split_range) if split_range < 0.5 else 0.5
+        frac = np.clip(frac, 0.1, 0.9)
+        if w >= h:
+            xm = x0 + frac * w
+            boxes += [(x0, y0, xm, y1), (xm, y0, x1, y1)]
+        else:
+            ym = y0 + frac * h
+            boxes += [(x0, y0, x1, ym), (x0, ym, x1, y1)]
+    boxes = np.array(boxes[:n])
+    w = boxes[:, 2] - boxes[:, 0]
+    h = boxes[:, 3] - boxes[:, 1]
+    d = rng.uniform(0, dither, (n, 2))
+    boxes[:, 2] -= w * d[:, 0]
+    boxes[:, 3] -= h * d[:, 1]
+    cx = (boxes[:, 0] + boxes[:, 2]) / 2
+    cy = (boxes[:, 1] + boxes[:, 3]) / 2
+    return _to_int_rects(cx, cy, boxes[:, 2] - boxes[:, 0], boxes[:, 3] - boxes[:, 1])
+
+
+DISTRIBUTIONS = {
+    "uniform": uniform,
+    "gaussian": gaussian,
+    "diagonal": diagonal,
+    "bit": bit,
+    "sierpinski": sierpinski,
+    "parcel": parcel,
+}
+
+
+def generate(distribution: str, n: int, seed: int = 0, **kw) -> np.ndarray:
+    if distribution not in DISTRIBUTIONS:
+        raise KeyError(f"unknown distribution {distribution!r}")
+    return DISTRIBUTIONS[distribution](n, seed=seed, **kw)

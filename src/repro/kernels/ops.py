@@ -1,0 +1,148 @@
+"""Jitted public wrappers around the rectangle-intersection kernels.
+
+``overlap_counts(queries, rects, mask)`` is the engine-facing op.  Three
+execution paths, selected by ``impl=``:
+
+* ``"pallas"``  — the Pallas TPU kernel (interpret=True on CPU containers).
+* ``"sparse"``  — the scalar-prefetch Pallas kernel with host-built active
+                  tile lists (DMA-level pruning; §Perf hillclimb kernel).
+* ``"xla"``     — pure-jnp tiled equivalent (same math, XLA codegen).  This
+                  is the fast path on CPU and the cross-check on TPU.
+
+All paths are exact-int equal to :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import rect_intersect as rk
+from repro.kernels import ref
+
+INT32_MAX = 2**31 - 1
+INT32_MIN = -(2**31)
+
+# On CPU containers the Pallas kernel runs in interpret mode (the kernel body
+# executes in Python) — correct but slow, so engines default to the XLA path
+# unless REPRO_KERNEL_IMPL overrides it.
+DEFAULT_IMPL = os.environ.get(
+    "REPRO_KERNEL_IMPL",
+    "xla" if jax.default_backend() == "cpu" else "pallas",
+)
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+def pad_rects_to(rects: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    """Pad an (N, 4) rect array with EMPTY sentinels to a multiple."""
+    n = rects.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return rects
+    empty = jnp.array([INT32_MAX, INT32_MAX, INT32_MIN, INT32_MIN],
+                      dtype=rects.dtype)
+    return jnp.concatenate([rects, jnp.tile(empty, (pad, 1))], axis=0)
+
+
+def tile_mbrs(rects: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """Per-tile MBRs of an (Np, 4) rect array, Np % tile == 0 → (Np/tile, 4).
+
+    Sentinel-safe: empty slots contribute INT32_MAX minima / INT32_MIN maxima
+    and so never widen a tile MBR; an all-empty tile gets the EMPTY MBR and is
+    pruned everywhere."""
+    r = rects.reshape(-1, tile, 4)
+    return jnp.concatenate(
+        [r[..., :2].min(axis=1), r[..., 2:].max(axis=1)], axis=-1
+    )
+
+
+def _xla_counts(queries, rects, mask, tq, tr):
+    del tq, tr
+    return ref.masked_overlap_counts_ref(queries, mask, rects)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tq", "tr", "impl")
+)
+def overlap_counts(
+    queries: jnp.ndarray,     # (Q, 4) int32
+    rects: jnp.ndarray,       # (R, 4) int32 (EMPTY-padded slots allowed)
+    mask: jnp.ndarray | None = None,   # (Q,) bool/int Phase-1 filter
+    *,
+    tq: int = rk.DEFAULT_TQ,
+    tr: int = rk.DEFAULT_TR,
+    impl: str = DEFAULT_IMPL,
+) -> jnp.ndarray:
+    """Per-query overlap counts with optional Phase-1 gating.  (Q,) int32."""
+    q = queries.shape[0]
+    if mask is None:
+        mask = jnp.ones((q,), jnp.int32)
+    mask = mask.astype(jnp.int32)
+
+    if impl == "xla":
+        return _xla_counts(queries, rects, mask, tq, tr)
+
+    qp = pad_rects_to(queries, tq)
+    rp = pad_rects_to(rects, tr)
+    maskp = jnp.pad(mask, (0, qp.shape[0] - q))
+    q_coords = qp.T                       # (4, Qp)
+    r_coords = rp.T                       # (4, Rp)
+    qmbrs = tile_mbrs(qp, tq)
+    rmbrs = tile_mbrs(rp, tr)
+    out = rk.overlap_counts_tiled(
+        q_coords, r_coords, qmbrs, rmbrs, maskp,
+        tq=tq, tr=tr, interpret=_INTERPRET,
+    )
+    return out[:q]
+
+
+def build_active_tiles(
+    q_tile_mbrs: np.ndarray, r_tile_mbrs: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side construction of the scalar-prefetch active-tile lists.
+
+    For each query tile, the list of rect tiles whose MBRs overlap it.
+    Dead entries point at tile 0 and are masked by ``nactive``."""
+    qo = (
+        (q_tile_mbrs[:, None, 0] <= r_tile_mbrs[None, :, 2])
+        & (r_tile_mbrs[None, :, 0] <= q_tile_mbrs[:, None, 2])
+        & (q_tile_mbrs[:, None, 1] <= r_tile_mbrs[None, :, 3])
+        & (r_tile_mbrs[None, :, 1] <= q_tile_mbrs[:, None, 3])
+    )
+    nq, nr = qo.shape
+    nactive = qo.sum(axis=1).astype(np.int32)
+    max_active = max(int(nactive.max()), 1)
+    tile_ids = np.zeros((nq, max_active), dtype=np.int32)
+    for i in range(nq):
+        ids = np.nonzero(qo[i])[0]
+        tile_ids[i, : ids.size] = ids
+    return nactive, tile_ids
+
+
+def overlap_counts_sparse_host(
+    queries: np.ndarray,
+    rects: np.ndarray,
+    mask: np.ndarray | None = None,
+    *,
+    tq: int = rk.DEFAULT_TQ,
+    tr: int = rk.DEFAULT_TR,
+) -> jnp.ndarray:
+    """Sparse (scalar-prefetch) path; tile lists built on host from MBRs."""
+    q = queries.shape[0]
+    if mask is None:
+        mask = np.ones((q,), np.int32)
+    qp = np.asarray(pad_rects_to(jnp.asarray(queries), tq))
+    rp = np.asarray(pad_rects_to(jnp.asarray(rects), tr))
+    maskp = np.pad(np.asarray(mask, np.int32), (0, qp.shape[0] - q))
+    qmbrs = np.asarray(tile_mbrs(jnp.asarray(qp), tq))
+    rmbrs = np.asarray(tile_mbrs(jnp.asarray(rp), tr))
+    nactive, tile_ids = build_active_tiles(qmbrs, rmbrs)
+    out = rk.overlap_counts_sparse(
+        jnp.asarray(qp.T), jnp.asarray(rp.T), jnp.asarray(maskp),
+        jnp.asarray(nactive), jnp.asarray(tile_ids),
+        tq=tq, tr=tr, interpret=_INTERPRET,
+    )
+    return out[:q]

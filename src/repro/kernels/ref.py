@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the rectangle-intersection kernels.
+
+These are the ground-truth implementations every Pallas kernel and every
+engine is validated against (``assert_allclose`` / exact int equality in the
+tests).  They are deliberately simple: broadcasted closed-interval overlap
+tests, chunked over queries to bound memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rect_overlap(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Closed-interval overlap between broadcastable (..., 4) rect arrays."""
+    return (
+        (a[..., 0] <= b[..., 2])
+        & (b[..., 0] <= a[..., 2])
+        & (a[..., 1] <= b[..., 3])
+        & (b[..., 1] <= a[..., 3])
+    )
+
+
+def overlap_counts_ref(
+    queries: jnp.ndarray, rects: jnp.ndarray, query_chunk: int = 1024
+) -> jnp.ndarray:
+    """Per-query count of overlapping rects.  queries (Q,4), rects (R,4) →
+    (Q,) int32.  Padding rects must use the EMPTY sentinel (xmin > xmax)."""
+    q = queries.shape[0]
+    pad = (-q) % query_chunk
+    qp = jnp.pad(queries, ((0, pad), (0, 0)))
+
+    def body(carry, qc):
+        hits = rect_overlap(qc[:, None, :], rects[None, :, :])
+        return carry, hits.sum(axis=1, dtype=jnp.int32)
+
+    _, out = jax.lax.scan(
+        body, None, qp.reshape(-1, query_chunk, 4)
+    )
+    return out.reshape(-1)[:q]
+
+
+def overlap_counts_np(queries: np.ndarray, rects: np.ndarray) -> np.ndarray:
+    """Numpy oracle (host-side, used by hypothesis tests)."""
+    out = np.zeros(queries.shape[0], dtype=np.int32)
+    for i, qr in enumerate(queries):
+        hit = (
+            (qr[0] <= rects[:, 2])
+            & (rects[:, 0] <= qr[2])
+            & (qr[1] <= rects[:, 3])
+            & (rects[:, 1] <= qr[3])
+        )
+        out[i] = hit.sum()
+    return out
+
+
+def masked_overlap_counts_ref(
+    queries: jnp.ndarray, mask: jnp.ndarray, rects: jnp.ndarray
+) -> jnp.ndarray:
+    """Two-phase reference: Phase-1 mask (Q,) bool gates the Phase-2 leaf
+    scan, mirroring Algorithm 3 on a single shard."""
+    counts = overlap_counts_ref(queries, rects)
+    return jnp.where(mask, counts, 0).astype(jnp.int32)

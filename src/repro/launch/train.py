@@ -1,0 +1,58 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch llama3.2-1b --smoke \\
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Uses the assigned full config by default (real-cluster entry point); --smoke
+selects the reduced config that fits this CPU container.  --resume continues
+from the latest checkpoint in --ckpt-dir (fault-tolerant restart path).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.launch import mesh as meshmod
+from repro.train import train_loop
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU container scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--mesh", default="auto",
+                    choices=["auto", "single", "multi"],
+                    help="auto = 1-device (container); single/multi = "
+                         "production meshes (requires the devices)")
+    args = ap.parse_args()
+
+    if args.mesh == "auto":
+        mesh = meshmod.single_device_mesh() if jax.device_count() == 1 \
+            else meshmod.make_production_mesh()
+    else:
+        mesh = meshmod.make_production_mesh(multi_pod=args.mesh == "multi")
+
+    cfg = configs.get_config(args.arch, smoke=args.smoke)
+    res = train_loop.train(
+        cfg, mesh, steps=args.steps, batch_size=args.batch,
+        seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, resume=not args.no_resume,
+        lr=args.lr, grad_accum=args.grad_accum)
+    print(f"final loss: {res['losses'][-1]:.4f} "
+          f"(start {res['losses'][0]:.4f}, {len(res['losses'])} steps)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

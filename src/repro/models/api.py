@@ -1,0 +1,275 @@
+"""Unified model API: one entry point per lifecycle step, dispatched on
+``cfg.family``.
+
+    param_shapes(cfg, dtype)          → pytree of ShapeDtypeStruct
+    init_params(cfg, key, dtype)      → pytree of arrays
+    forward(cfg, params, batch)       → logits (train/prefill)
+    loss_fn(cfg, params, batch)       → scalar causal-LM loss
+    decode_state_shapes(cfg, B, S)    → pytree of ShapeDtypeStruct
+    init_decode_state(cfg, B, S)      → zeroed state (ring buffers at -1)
+    decode_step(cfg, params, st, b)   → (logits, state)
+    count_params(cfg[, active_only])  → int (roofline 6·N·D arithmetic)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import griffin, layers, moe, ssm, transformer, whisper
+from repro.models.base import ModelConfig
+from repro.parallel.sharding import shard
+
+_FAMILIES = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": griffin,
+    "encdec": whisper,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.float32):
+    return module_for(cfg).param_shapes(cfg, dtype)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    return layers.init_from_shapes(param_shapes(cfg, dtype), key)
+
+
+def forward(cfg: ModelConfig, params, batch, **kw):
+    return module_for(cfg).forward(cfg, params, batch, **kw)
+
+
+LOSS_CHUNK = 256
+
+
+def _head_logits(cfg: ModelConfig, params, h: jnp.ndarray) -> jnp.ndarray:
+    """Apply the LM head to hidden states (tied or untied)."""
+    head = params.get("lm_head") if isinstance(params, dict) else None
+    if head is None:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    return h @ head.astype(h.dtype)
+
+
+def _vocab_parallel_xent(cfg, params, hidden, targets, weights, mesh):
+    """Megatron-style vocab-parallel cross-entropy (§Perf iteration D4).
+
+    hidden stays (batch, seq)-sharded; the head stays vocab-sharded; every
+    device computes partial logits (B_loc, S_loc, V/m) against its own vocab
+    shard and the logsumexp / gold-logit terms combine with pmax/psum of
+    (B_loc, S_loc) scalars.  No activation gather, no head gather — the
+    chunked-scan loss was measured slicing a model-sharded hidden, which XLA
+    'resolves' by replicating it (9× 2.15 GB f32 copies on qwen2-vl).
+    Vocabs that do not divide the model axis (49155, 51865) are zero-padded;
+    padding columns are masked to -inf."""
+    from repro.parallel.sharding import excluded_axes
+    m_sz = mesh.shape["model"]
+    head = params.get("lm_head")
+    tied = head is None
+    if tied:
+        head = params["embed"]            # (V, d)
+    v = cfg.vocab
+    vpad = -(-v // m_sz) * m_sz
+    if vpad != v:
+        pw = ((0, vpad - v), (0, 0)) if tied else ((0, 0), (0, vpad - v))
+        head = jnp.pad(head, pw)
+    vloc = vpad // m_sz
+    dp_axes = tuple(a for a in ("pod", "data")
+                    if a in mesh.axis_names and a not in excluded_axes())
+    b, s = targets.shape
+    seq_ok = s % m_sz == 0
+    h_spec = jax.sharding.PartitionSpec(
+        dp_axes or None, "model" if seq_ok else None, None)
+    t_spec = jax.sharding.PartitionSpec(
+        dp_axes or None, "model" if seq_ok else None)
+    head_spec = (jax.sharding.PartitionSpec("model", None) if tied
+                 else jax.sharding.PartitionSpec(None, "model"))
+
+    def body(h, t, w, hd):
+        hd16 = hd.astype(h.dtype)
+        if tied:
+            lg = jnp.einsum("bsd,vd->bsv", h, hd16,
+                            preferred_element_type=jnp.float32)
+        else:
+            lg = jnp.einsum("bsd,dv->bsv", h, hd16,
+                            preferred_element_type=jnp.float32)
+        j = jax.lax.axis_index("model")
+        vstart = j * vloc
+        col = vstart + jnp.arange(vloc)
+        lg = jnp.where(col[None, None, :] < v, lg, -1e30)
+        # max is a gradient-neutral stabiliser; pmax has no differentiation
+        # rule, so gather the (B,S) per-shard maxima (tiny) and reduce
+        lmax = jax.lax.all_gather(
+            jax.lax.stop_gradient(lg.max(-1)), "model").max(0)
+        sumexp = jnp.exp(lg - lmax[..., None]).sum(-1)
+        logz = lmax + jnp.log(jax.lax.psum(sumexp, "model"))
+        in_range = (t >= vstart) & (t < vstart + vloc)
+        t_loc = jnp.clip(t - vstart, 0, vloc - 1)
+        gold_l = jnp.take_along_axis(lg, t_loc[..., None], axis=-1)[..., 0]
+        gold = jax.lax.psum(jnp.where(in_range, gold_l, 0.0), "model")
+        total = ((logz - gold) * w).sum()
+        axes = ("model",) + dp_axes if seq_ok else dp_axes
+        return jax.lax.psum(total, axes) if axes else total
+
+    total = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(h_spec, t_spec, t_spec, head_spec),
+        out_specs=jax.sharding.PartitionSpec(),
+        axis_names={"model"} | set(dp_axes), check_vma=False,
+    )(hidden, targets, weights.astype(jnp.float32), head)
+    return total / weights.sum()
+
+
+def loss_fn(cfg: ModelConfig, params, batch,
+            chunk: int = LOSS_CHUNK) -> jnp.ndarray:
+    """Next-token cross-entropy.
+
+    With a live multi-device mesh: vocab-parallel shard_map cross-entropy
+    (see :func:`_vocab_parallel_xent`).  Without one (smoke tests): a
+    seq-chunked scan bounds the logits memory."""
+    from repro.parallel.sharding import current_mesh, excluded_axes
+    hidden = forward(cfg, params, batch, return_hidden=True)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    targets = jnp.roll(tokens, -1, axis=1)
+    # final position has no next token — weight 0
+    weights = jnp.ones((b, s), jnp.float32).at[:, -1].set(0.0)
+
+    mesh = current_mesh()
+    if (mesh is not None and "model" in mesh.axis_names
+            and mesh.shape["model"] > 1
+            and not excluded_axes()):  # nested shard_map can't re-enter a
+        # partial-manual region (pipeline / compressed cross-pod modes)
+        return _vocab_parallel_xent(cfg, params, hidden, targets, weights,
+                                    mesh)
+
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad)))
+    nc = (s + pad) // c
+    hc = jnp.moveaxis(hidden.reshape(b, nc, c, -1), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, nc, c), 1, 0)
+    wc = jnp.moveaxis(weights.reshape(b, nc, c), 1, 0)
+
+    def body(acc, inp):
+        h, t, w = inp
+        lg = _head_logits(cfg, params, h).astype(jnp.float32)
+        # vocab stays sharded over 'tp' — the reductions psum (B,c) scalars
+        lg = shard(lg, "batch", None, "tp")
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, t[..., None], axis=-1)[..., 0]
+        return acc + ((logz - gold) * w).sum(), None
+
+    # recompute each chunk's logits in the backward pass — saving them would
+    # stack the full (B, S, vocab) fp32 logits the chunking exists to avoid
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc, wc))
+    return total / weights.sum()
+
+
+def decode_state_shapes(cfg: ModelConfig, batch_size: int, seq_len: int,
+                        dtype=jnp.bfloat16):
+    return module_for(cfg).decode_state_shapes(cfg, batch_size, seq_len, dtype)
+
+
+def init_decode_state(cfg: ModelConfig, batch_size: int, seq_len: int,
+                      dtype=jnp.bfloat16):
+    shapes = decode_state_shapes(cfg, batch_size, seq_len, dtype)
+
+    def init(path, s):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "slot_pos" in name:
+            return jnp.full(s.shape, -1, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree_util.tree_map_with_path(init, shapes)
+
+
+def decode_step(cfg: ModelConfig, params, state, batch):
+    return module_for(cfg).decode_step(cfg, params, state, batch)
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Full-sequence forward returning logits (+ cache where the family
+    supports prefill-into-cache)."""
+    return forward(cfg, params, batch, return_cache=True)
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = param_shapes(cfg, jnp.float32)
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        n = int(np.prod(leaf.shape))
+        if active_only and "experts/" in name:
+            n = n * cfg.moe_top_k // cfg.moe_experts
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Batch construction (ShapeDtypeStructs for the dry-run; concrete for tests)
+# ---------------------------------------------------------------------------
+
+
+def train_batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    b = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "encdec":
+        b["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        b["pos_ids"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+    return b
+
+
+def decode_batch_shapes(cfg: ModelConfig, batch: int) -> dict:
+    b = {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        b["pos_ids"] = jax.ShapeDtypeStruct((3, batch, 1), jnp.int32)
+    return b
+
+
+def make_train_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)}
+    if cfg.family == "encdec":
+        b["frames"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.enc_frames, cfg.d_model)),
+            jnp.bfloat16)
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.num_patches, cfg.d_model)),
+            jnp.bfloat16)
+        pos = np.broadcast_to(np.arange(seq)[None, None], (3, batch, seq))
+        b["pos_ids"] = jnp.asarray(pos.copy(), jnp.int32)
+    return b
+
+
+def make_decode_batch(cfg: ModelConfig, batch: int, pos: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    b = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, 1)),
+                              jnp.int32),
+        "pos": jnp.asarray(pos, jnp.int32),
+    }
+    if cfg.family == "vlm":
+        b["pos_ids"] = jnp.full((3, batch, 1), pos, jnp.int32)
+    return b

@@ -1,0 +1,101 @@
+"""Unified model configuration for the assigned architecture pool.
+
+One :class:`ModelConfig` covers every family (dense GQA transformers, MoE,
+mamba-1 SSM, RG-LRU hybrid, encoder-decoder audio, VLM backbone).  Family
+modules consume the fields relevant to them; `family` selects the module in
+:mod:`repro.models.api`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"           # mlp activation: silu (SwiGLU) | gelu (GeGLU/plain)
+    glu: bool = True            # gated MLP (SwiGLU/GeGLU) vs plain 2-layer
+
+    # --- MoE -------------------------------------------------------------
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_shared_ff: int = 0      # shared-expert hidden size (qwen2-moe: 5632)
+    capacity_factor: float = 1.25
+
+    # --- SSM (mamba-1) -----------------------------------------------------
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0            # 0 → ceil(d_model / 16)
+
+    # --- hybrid (griffin / RG-LRU) ----------------------------------------
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    window: int = 0             # local-attention window (0 = full/causal)
+    lru_width: int = 0          # 0 → d_model
+    conv_width: int = 4
+
+    # --- encoder-decoder (whisper) ----------------------------------------
+    enc_layers: int = 0
+    enc_frames: int = 1500      # stub frontend output length
+    learned_pos: bool = False
+
+    # --- VLM (qwen2-vl) ----------------------------------------------------
+    mrope_sections: Tuple[int, ...] = ()  # (t, h, w) half-dim splits
+    num_patches: int = 256      # stub patch-embedding count per sample
+
+    # --- scan/remat structure ----------------------------------------------
+    scan_layers: bool = True    # lax.scan over stacked layers (small HLO)
+    remat: bool = True
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+        if self.family == "ssm" and self.dt_rank == 0:
+            object.__setattr__(self, "dt_rank", -(-self.d_model // 16))
+        if self.family == "hybrid" and self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def param_count(self) -> int:
+        """Total parameters (for 6·N·D roofline arithmetic)."""
+        from repro.models import api
+        return api.count_params(self)
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: routed top-k + shared only)."""
+        from repro.models import api
+        return api.count_params(self, active_only=True)
+
+
+def validate(cfg: ModelConfig) -> None:
+    assert cfg.family in ("dense", "moe", "ssm", "hybrid", "encdec", "vlm"), cfg.family
+    if cfg.family not in ("ssm",):
+        assert cfg.n_heads >= 1 and cfg.d_model % 1 == 0
+        if cfg.n_kv_heads:
+            assert cfg.n_heads % cfg.n_kv_heads == 0
+    if cfg.family == "moe":
+        assert cfg.moe_experts > 0 and cfg.moe_top_k > 0
+    if cfg.family == "hybrid":
+        assert cfg.block_pattern and cfg.window > 0
+    if cfg.family == "vlm":
+        assert sum(cfg.mrope_sections) == cfg.head_dim // 2

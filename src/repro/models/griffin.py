@@ -1,0 +1,314 @@
+"""RG-LRU + local-attention hybrid (recurrentgemma-2b, Griffin architecture).
+
+Block pattern (rec, rec, attn) repeats over the depth; 26 layers → 8 full
+pattern units + 2 trailing recurrent blocks.  The pattern units are stacked
+and scanned (one compiled unit body), the tail is scanned separately — the
+HLO contains exactly two block bodies.
+
+Recurrent block: x → [linear → GeLU] gate branch ⊗ [linear → causal conv →
+RG-LRU] → linear out.  RG-LRU (Griffin eq. 3-4):
+
+    r_t = σ(W_a x_t + b_a)          recurrence gate
+    i_t = σ(W_x x_t + b_x)          input gate
+    log a_t = -c · softplus(Λ) · r_t          (c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence reuses the chunked scan machinery of :mod:`repro.models.ssm`
+(lax.scan over chunks, associative scan within).  Local attention uses MQA
+(kv = 1) with a 2048 window; its decode cache is a ring buffer of `window`
+slots — combined with the O(1) recurrent state this bounds decode memory and
+is why recurrentgemma runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.base import ModelConfig
+from repro.parallel.sharding import shard
+
+LRU_C = 8.0
+SCAN_CHUNK = 256
+
+
+def rec_layer_shapes(cfg: ModelConfig, dtype) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "norm": L.vec(d, dtype),
+        "rg_x": L.dense(d, w, dtype),
+        "rg_gate": L.dense(d, w, dtype),
+        "conv_w": jax.ShapeDtypeStruct((w, cfg.conv_width), dtype),
+        "conv_b": L.vec(w, dtype),
+        "rg_a_w": L.dense(w, w, dtype),
+        "rg_a_b": L.vec(w, dtype),
+        "rg_i_w": L.dense(w, w, dtype),
+        "rg_i_b": L.vec(w, dtype),
+        "lambda_p": L.vec(w, dtype),
+        "rg_out": L.dense(w, d, dtype),
+        "mlp_norm": L.vec(d, dtype),
+        "w_gate": L.dense(d, cfg.d_ff, dtype),
+        "w_up": L.dense(d, cfg.d_ff, dtype),
+        "w_down": L.dense(cfg.d_ff, d, dtype),
+    }
+
+
+def _stack(shapes, n):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), shapes)
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    pat = cfg.block_pattern
+    n_units, tail = divmod(cfg.n_layers, len(pat))
+    unit = {}
+    for idx, kind in enumerate(pat):
+        shapes = (rec_layer_shapes(cfg, dtype) if kind == "rec"
+                  else T.layer_shapes(cfg, dtype))
+        unit[f"b{idx}_{kind}"] = _stack(shapes, n_units)
+    p = {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dtype),
+        "final_norm": L.vec(cfg.d_model, dtype),
+        "units": unit,
+    }
+    if tail:
+        tail_shapes = {}
+        for idx in range(tail):
+            kind = pat[idx]
+            shapes = (rec_layer_shapes(cfg, dtype) if kind == "rec"
+                      else T.layer_shapes(cfg, dtype))
+            tail_shapes[f"t{idx}_{kind}"] = shapes
+        p["tail"] = tail_shapes
+    p["lm_head"] = L.dense(cfg.d_model, cfg.vocab, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrence
+# ---------------------------------------------------------------------------
+
+
+def _rglru_gates(lp, x1):
+    """a_t (B,S,w) fp32 decay, beta·i·x (B,S,w) fp32 input contribution."""
+    r = jax.nn.sigmoid(
+        (x1 @ lp["rg_a_w"].astype(x1.dtype)).astype(jnp.float32)
+        + lp["rg_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        (x1 @ lp["rg_i_w"].astype(x1.dtype)).astype(jnp.float32)
+        + lp["rg_i_b"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(lp["lambda_p"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9))
+    bx = beta * i * x1.astype(jnp.float32)
+    return a, bx
+
+
+def _chunked_lru_scan(a, bx, h0):
+    """h_t = a_t ⊙ h_{t-1} + bx_t over (B, S, w) with chunked assoc. scan."""
+    bsz, s, w = a.shape
+    chunk = min(SCAN_CHUNK, s)
+    pad = (-s) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    ac = jnp.moveaxis(a.reshape(bsz, nc, chunk, w), 1, 0)
+    bc = jnp.moveaxis(bx.reshape(bsz, nc, chunk, w), 1, 0)
+
+    def chunk_step(h, inputs):
+        a_c, b_c = inputs
+
+        def combine(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, br + ar * bl
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a_c, b_c), axis=1)
+        h_t = a_cum * h[:, None] + b_cum
+        return h_t[:, -1], h_t
+
+    h_f, hs = jax.lax.scan(chunk_step, h0, (ac, bc))
+    h_seq = jnp.moveaxis(hs, 0, 1).reshape(bsz, s + pad, w)[:, :s]
+    return h_seq, h_f
+
+
+def rec_block(cfg: ModelConfig, lp, x, h0=None, conv_state=None, decode=False):
+    """Recurrent residual block.  Full-sequence when decode=False."""
+    bsz, s, _ = x.shape
+    w = cfg.lru_width
+    h = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ lp["rg_gate"].astype(h.dtype))
+    x1 = h @ lp["rg_x"].astype(h.dtype)
+    x1 = shard(x1, "batch", None, "tp")
+    if decode:
+        conv_state = jnp.concatenate(
+            [conv_state[:, 1:], x1.astype(conv_state.dtype)], axis=1)
+        cw = lp["conv_w"].astype(jnp.float32)
+        x1 = jnp.einsum("bkw,wk->bw",
+                        conv_state.astype(jnp.float32), cw)
+        x1 = (x1 + lp["conv_b"].astype(jnp.float32))[:, None].astype(x.dtype)
+    else:
+        k = cfg.conv_width
+        xp = jnp.pad(x1, ((0, 0), (k - 1, 0), (0, 0)))
+        x1 = sum(xp[:, j: j + s] * lp["conv_w"][:, j].astype(x1.dtype)
+                 for j in range(k)) + lp["conv_b"].astype(x1.dtype)
+    a, bx = _rglru_gates(lp, x1)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), jnp.float32)
+    if decode:
+        h_new = a[:, 0] * h0 + bx[:, 0]
+        y = h_new[:, None]
+    else:
+        y, h_new = _chunked_lru_scan(a, bx, h0)
+    y = y.astype(x.dtype) * gate
+    x = x + y @ lp["rg_out"].astype(x.dtype)
+    # MLP sub-block (GeGLU)
+    hm = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + L.mlp(hm, lp, cfg.act, cfg.glu)
+    out_state = (conv_state, h_new) if decode else h_new
+    return x, out_state
+
+
+def _attn_block_train(cfg, lp, x, cos, sin):
+    x, kv = T.attn_block(cfg, lp, x, cos, sin, window=cfg.window)
+    x = T.mlp_block(cfg, lp, x)
+    return x, kv
+
+
+def forward(cfg: ModelConfig, params, batch, *, return_cache: bool = False,
+            return_hidden: bool = False):
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"].astype(L.COMPUTE_DTYPE), tokens)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma-style scaling
+    x = shard(x, "batch", "seq", None)
+    cos, sin = T.rope_for(cfg, batch, x.shape[1])
+    pat = cfg.block_pattern
+
+    def unit_body(x, unit_params):
+        # pin the scan carry against convert hoisting (see transformer)
+        x = jax.lax.optimization_barrier(x)
+        for idx, kind in enumerate(pat):
+            lp = unit_params[f"b{idx}_{kind}"]
+            if kind == "rec":
+                x, _ = rec_block(cfg, lp, x)
+            else:
+                x, _ = _attn_block_train(cfg, lp, x, cos, sin)
+        return shard(x, "batch", "seq", None), None
+
+    body = unit_body
+    if cfg.remat:
+        body = jax.checkpoint(
+            unit_body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["units"])
+    else:
+        n_units = cfg.n_layers // len(pat)
+        for u in range(n_units):
+            up = jax.tree_util.tree_map(lambda a: a[u], params["units"])
+            x, _ = body(x, up)
+    for name, lp in params.get("tail", {}).items():
+        kind = name.split("_")[1]
+        if kind == "rec":
+            x, _ = rec_block(cfg, lp, x)
+        else:
+            x, _ = _attn_block_train(cfg, lp, x, cos, sin)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    logits = x @ params["lm_head"].astype(x.dtype)
+    logits = shard(logits, "batch", None, "tp")
+    if return_cache:
+        return logits, None
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Decode: ring-buffer window cache for attention, O(1) recurrent states.
+# ---------------------------------------------------------------------------
+
+
+def _layer_kinds(cfg: ModelConfig) -> list[str]:
+    pat = cfg.block_pattern
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def decode_state_shapes(cfg: ModelConfig, batch_size: int, seq_len: int,
+                        dtype=jnp.bfloat16) -> dict:
+    del seq_len  # bounded by the attention window — sub-quadratic by design
+    kinds = _layer_kinds(cfg)
+    n_rec = sum(k == "rec" for k in kinds)
+    n_att = sum(k == "attn" for k in kinds)
+    w = cfg.window
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (n_rec, batch_size, cfg.conv_width, cfg.lru_width), dtype),
+        "h": jax.ShapeDtypeStruct(
+            (n_rec, batch_size, cfg.lru_width), jnp.float32),
+        "k": jax.ShapeDtypeStruct(
+            (n_att, batch_size, w, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jax.ShapeDtypeStruct(
+            (n_att, batch_size, w, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "slot_pos": jax.ShapeDtypeStruct((w,), jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, state, batch):
+    pos = batch["pos"]
+    bsz = batch["tokens"].shape[0]
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[batch["tokens"]]
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    p = jnp.broadcast_to(pos[None, None], (bsz, 1)).astype(jnp.int32)
+    cos, sin = L.rope_cos_sin(p, cfg.head_dim, cfg.rope_theta)
+
+    slot = jnp.mod(pos, cfg.window)
+    slot_pos = state["slot_pos"].at[slot].set(pos)
+    valid = (slot_pos >= 0) & (slot_pos > pos - cfg.window)
+
+    kinds = _layer_kinds(cfg)
+    pat = cfg.block_pattern
+    n_units = cfg.n_layers // len(pat)
+    conv_new, h_new = list(state["conv"]), list(state["h"])
+    k_new, v_new = list(state["k"]), list(state["v"])
+    ri, ai = 0, 0
+    for li, kind in enumerate(kinds):
+        unit, off = divmod(li, len(pat))
+        if unit < n_units:
+            lp = jax.tree_util.tree_map(
+                lambda a_: a_[unit], params["units"][f"b{off}_{kind}"])
+        else:
+            lp = params["tail"][f"t{off}_{kind}"]
+        if kind == "rec":
+            x, (cst, hst) = rec_block(cfg, lp, x, h0=state["h"][ri],
+                                      conv_state=state["conv"][ri],
+                                      decode=True)
+            conv_new[ri], h_new[ri] = cst, hst
+            ri += 1
+        else:
+            h_in = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+            q, k, v = T._qkv(cfg, lp, h_in)
+            q = L.apply_rotary(q, cos, sin)
+            k = L.apply_rotary(k, cos, sin)
+            kc = jax.lax.dynamic_update_slice(
+                state["k"][ai], k.astype(state["k"][ai].dtype),
+                (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                state["v"][ai], v.astype(state["v"][ai].dtype),
+                (0, slot, 0, 0))
+            o = L.gqa_attention(q, kc, vc, causal=False,
+                                kv_valid=jnp.broadcast_to(valid,
+                                                          (bsz, cfg.window)))
+            o = o.reshape(bsz, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+            x = x + o @ lp["wo"].astype(x.dtype)
+            x = T.mlp_block(cfg, lp, x)
+            k_new[ai], v_new[ai] = kc, vc
+            ai += 1
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, {
+        "conv": jnp.stack(conv_new), "h": jnp.stack(h_new),
+        "k": jnp.stack(k_new), "v": jnp.stack(v_new),
+        "slot_pos": slot_pos,
+    }

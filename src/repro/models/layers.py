@@ -1,0 +1,352 @@
+"""Shared neural building blocks: norms, RoPE/M-RoPE, attention (full, local,
+cross, flash-chunked), gated MLPs.
+
+All computation follows mixed precision: parameters may be fp32 (training
+master) or bf16 (serving); matmuls run in bf16 with fp32 softmax/norm
+accumulation.  Activation sharding uses the logical axes of
+:mod:`repro.parallel.sharding` and degrades to no-ops without a mesh.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import gather_safe_mode, shard
+
+COMPUTE_DTYPE = jnp.bfloat16
+# Above this many score elements per (batch, head) the attention switches to
+# the chunked flash path to bound activation memory: a 2048×2048 fp32 score
+# chunk is 16 MB per (batch, head) — the plain path at 4k×4k would cost 64 MB
+# per (batch, head) and blow the per-device HBM at train_4k scale.
+FLASH_THRESHOLD = 2048 * 2048
+FLASH_CHUNK_Q = 1024
+FLASH_CHUNK_K = 1024
+NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + 0.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def remat_segments(n_layers: int) -> int:
+    """√L-nested-remat segment count: the largest divisor of n_layers that
+    is ≤ √n_layers (1 → plain scan).  Outer scan saves only segment-boundary
+    carries; each segment recomputes its inner carries during backward —
+    peak saved-activation memory drops from L·act to (L/segs + segs)·act at
+    the cost of one extra forward recompute (§Perf iteration D3)."""
+    import math
+    best = 1
+    for d in range(2, int(math.isqrt(n_layers)) + 1):
+        if n_layers % d == 0:
+            best = d
+    return best
+
+
+def segmented_scan(body, x, stacked_params, n_layers: int):
+    """lax.scan over layers with √L nested remat (see remat_segments)."""
+    segs = remat_segments(n_layers)
+    if segs <= 1:
+        return jax.lax.scan(body, x, stacked_params)
+    per = n_layers // segs
+    seg_params = jax.tree_util.tree_map(
+        lambda a: a.reshape(segs, per, *a.shape[1:]), stacked_params)
+
+    def seg_body(x, sp):
+        return jax.lax.scan(body, x, sp)
+
+    seg_body = jax.checkpoint(
+        seg_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, ys = jax.lax.scan(seg_body, x, seg_params)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_layers, *a.shape[2:]), ys)
+    return x, ys
+
+
+def embed_lookup(embed: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Embedding lookup.  Inside partial-manual shard_map regions the gather
+    is replaced by a one-hot contraction (see sharding.gather_safe_mode).
+
+    The optimization barrier pins the fp32→bf16 convert BEFORE the gather:
+    with a vocab-sharded table the partitioned gather ends in an all-reduce,
+    and without the barrier XLA reorders the convert after it, all-reducing
+    fp32 — measured 537 MB/step vs 268 MB on llama train_4k (§Perf D2)."""
+    if gather_safe_mode():
+        oh = jax.nn.one_hot(tokens, embed.shape[0], dtype=embed.dtype)
+        return oh @ embed
+    embed = jax.lax.optimization_barrier(embed)
+    return embed[tokens]
+
+
+def wcast(w: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Weight cast pinned BEFORE any FSDP gather: without the barrier XLA
+    reorders the fp32→bf16 convert after the all-gather and moves fp32
+    weight bytes over the fabric (measured 0.97 GB vs 0.48 GB per MLP matrix
+    on qwen2-vl train_4k, §Perf D4)."""
+    if w.dtype == dtype:
+        return w
+    return jax.lax.optimization_barrier(w.astype(dtype))
+
+
+def act_fn(name: str) -> Callable:
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (..., S) int32 → cos/sin (..., S, head_dim//2) fp32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float,
+                  sections: tuple[int, ...]):
+    """M-RoPE (Qwen2-VL): positions (3, B, S) for (t, h, w); each frequency
+    band uses the positional stream of its section."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # (3, B, S, half)
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    parts_c, parts_s = [], []
+    off = 0
+    for s_idx, width in enumerate(sections):
+        parts_c.append(jnp.cos(ang[s_idx, ..., off: off + width]))
+        parts_s.append(jnp.sin(ang[s_idx, ..., off: off + width]))
+        off += width
+    return jnp.concatenate(parts_c, -1), jnp.concatenate(parts_s, -1)
+
+
+def apply_rotary(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (B, S, H, hd); cos/sin (B, S, hd//2) — llama 'rotate-half' layout."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # (B, S, 1, half)
+    s = sin[..., None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1
+    ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+
+def band_mask(q_len: int, k_len: int, q_offset, window: int = 0):
+    """(q_len, k_len) bool: causal (+ optional local window) band.
+    ``q_offset`` is the absolute position of query row 0 (static or traced)."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    ki = jnp.arange(k_len)[None, :]
+    m = ki <= qi
+    if window:
+        m &= ki > qi - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, full / chunked-flash)
+# ---------------------------------------------------------------------------
+
+
+def _decode_attention(q, k, v, kv_valid, scale):
+    """Grouped one-token path: q (B,1,Hq,hd), k/v (B,T,Hkv,hd).  Keeps KV in
+    grouped layout — decode is cache-read-bound and must not amplify bytes.
+    The cache's seq axis may be sharded ('seq'→model); the softmax reduction
+    over T is then XLA's distributed flash-decode."""
+    b, _, hq, hd = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, 1, hk, g, hd)
+    s = jnp.einsum("bsigd,btid->bigst", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if kv_valid is not None:
+        s = jnp.where(kv_valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bigst,btid->bsigd", p.astype(v.dtype), v)
+    return o.reshape(b, 1, hq, hd)
+
+
+def _plain_attention(q, k, v, mask, scale):
+    """Repeated-KV layout: q/k/v (B,*,H,hd); head axis shardable over 'tp'."""
+    s = jnp.einsum("bshd,bthd->bhst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)
+    return o
+
+
+def _flash_attention(q, k, v, mask_fn, scale, chunk_q, chunk_k):
+    """Double-chunked online-softmax attention on the repeated-KV layout:
+    outer map over query blocks, inner scan over KV blocks.  Peak score
+    memory O(chunk_q · chunk_k) per (batch, head)."""
+    b, s_len, h, hd = q.shape
+    t_len = k.shape[1]
+    pad_q = (-s_len) % chunk_q
+    pad_k = (-t_len) % chunk_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // chunk_q, kp.shape[1] // chunk_k
+
+    kb = jnp.moveaxis(kp.reshape(b, nk, chunk_k, h, hd), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(b, nk, chunk_k, h, hd), 1, 0)
+    qb = jnp.moveaxis(qp.reshape(b, nq, chunk_q, h, hd), 1, 0)
+
+    def q_block(qi, qc):
+        def kv_block(carry, inputs):
+            m_run, l_run, acc = carry
+            ki, kc, vc = inputs
+            sc = jnp.einsum("bshd,bthd->bhst", qc, kc,
+                            preferred_element_type=jnp.float32) * scale
+            msk = mask_fn(qi * chunk_q, chunk_q, ki * chunk_k, chunk_k)
+            sc = jnp.where(msk, sc, NEG_INF)
+            m_new = jnp.maximum(m_run, sc.max(axis=-1))
+            corr = jnp.exp(m_run - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l_run * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhst,bthd->bhsd", p.astype(vc.dtype), vc)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, h, chunk_q, hd), v.dtype)
+        # flash-style backward: recompute the score chunk instead of saving
+        # it — without this the scan stacks (nq·nk) fp32 score chunks, i.e.
+        # the full S×T score matrix the flash path exists to avoid.
+        kv_body = jax.checkpoint(
+            kv_block, policy=jax.checkpoint_policies.nothing_saveable)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        o = acc / jnp.maximum(l_f, 1e-30)[..., None].astype(acc.dtype)
+        return jnp.moveaxis(o, 2, 1)  # (B, chunk_q, H, hd)
+
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qb))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nq * chunk_q, h, hd)
+    return out[:, :s_len]
+
+
+def gqa_attention(
+    q: jnp.ndarray,            # (B, S, Hq, hd)
+    k: jnp.ndarray,            # (B, T, Hkv, hd)
+    v: jnp.ndarray,            # (B, T, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    kv_valid: jnp.ndarray | None = None,  # (B, T) bool — decode-cache mask
+) -> jnp.ndarray:
+    """Grouped-query attention: grouped one-token path for decode, repeated-KV
+    (head-sharded) full/flash paths for train/prefill."""
+    b, s_len, hq, hd = q.shape
+    t_len = k.shape[1]
+    hk = k.shape[2]
+    g = hq // hk
+    scale = 1.0 / math.sqrt(hd)
+
+    if s_len == 1:
+        return _decode_attention(q, k, v, kv_valid, scale)
+
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    k = shard(k, "batch", None, "tp", None)
+    v = shard(v, "batch", None, "tp", None)
+
+    if s_len * t_len <= FLASH_THRESHOLD:
+        if causal or window:
+            m = band_mask(s_len, t_len, q_offset, window)[None, None]
+        else:
+            m = jnp.ones((s_len, t_len), bool)[None, None]
+        if kv_valid is not None:
+            m = m & kv_valid[:, None, None, :]
+        o = _plain_attention(q, k, v, m, scale)
+    else:
+        def mask_fn(q0, ql, k0, kl):
+            qi = jnp.arange(ql)[:, None] + q0 + q_offset
+            ki = jnp.arange(kl)[None, :] + k0
+            m_ = ki < t_len
+            if causal:
+                m_ = m_ & (ki <= qi)
+            if window:
+                m_ = m_ & (ki > qi - window)
+            return m_[None, None]
+
+        o = _flash_attention(q, k, v, mask_fn, scale,
+                             FLASH_CHUNK_Q, FLASH_CHUNK_K)
+    return o.reshape(b, s_len, hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp(x, p, act: str, glu: bool):
+    """Gated (SwiGLU/GeGLU) or plain 2-layer MLP.  x (..., d)."""
+    f = act_fn(act)
+    h_up = x @ wcast(p["w_up"], x.dtype)
+    if glu:
+        h = f(x @ wcast(p["w_gate"], x.dtype)) * h_up
+    else:
+        h = f(h_up)
+    if h.ndim == 3:
+        h = shard(h, "batch", "seq", None)
+    else:  # (tokens, ff) — MoE shared-expert path
+        h = shard(h, "tokens", None)
+    return h @ wcast(p["w_down"], x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree construction helpers
+# ---------------------------------------------------------------------------
+
+
+def dense(d_in: int, d_out: int, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((d_in, d_out), dtype)
+
+
+def vec(n: int, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((n,), dtype)
+
+
+def init_from_shapes(shapes, key, scale: float = 0.02):
+    """Materialise a ShapeDtypeStruct pytree with N(0, scale²) weights (norm
+    'scale'/'bias' leaves get zeros — note rms_norm uses (1 + w))."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+
+    def init_leaf(path_leaf):
+        path, sds = path_leaf
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        sub = jax.random.fold_in(key, hash(name) % (2**31))
+        if sds.ndim <= 1 or "norm" in name or "scale" in name or name.endswith("_b"):
+            return jnp.zeros(sds.shape, sds.dtype)
+        return (jax.random.normal(sub, sds.shape, jnp.float32) * scale).astype(sds.dtype)
+
+    leaves = [init_leaf(pl) for pl in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,278 @@
+"""Mixture-of-Experts transformer (granite-moe, qwen2-moe).
+
+Routing: softmax router, top-k selection, renormalised gates, capacity-based
+token dropping (capacity_factor, GShard-style).
+
+Expert parallelism follows the paper's broadcast doctrine (DESIGN.md Sec 4)
+as an explicit shard_map over the mesh: tokens are ALL-GATHERED within each
+model group (the query broadcast), every model rank dispatches into its
+OWNED expert chunk with purely local scatters/gathers (the local leaf scan —
+letting GSPMD partition a global-capacity scatter replicates 45 GB index
+buffers per device; measured in the §Perf log), and partial outputs are
+REDUCE-SCATTERED back (the count psum).  Expert counts that do not divide
+the model axis (60, 40 on a 16-way axis) are zero-padded; padding experts
+receive no routes.
+
+qwen2-moe additionally has 4 "shared experts" fused into one always-on MLP
+(hidden 4·1408 = 5632) gated by a sigmoid projection, per the HF reference;
+the shared path runs in plain GSPMD outside the shard_map.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.base import ModelConfig
+from repro.parallel.sharding import shard
+
+
+def layer_shapes(cfg: ModelConfig, dtype) -> dict:
+    d, e, f = cfg.d_model, cfg.moe_experts, cfg.d_ff
+    p = T.layer_shapes(cfg, dtype)
+    # replace the dense FFN with router + experts (+ optional shared expert)
+    for k_ in ("w_gate", "w_up", "w_down"):
+        p.pop(k_, None)
+    p["router"] = L.dense(d, e, dtype)
+    p["experts"] = {
+        "w_gate": jax.ShapeDtypeStruct((e, d, f), dtype),
+        "w_up": jax.ShapeDtypeStruct((e, d, f), dtype),
+        "w_down": jax.ShapeDtypeStruct((e, f, d), dtype),
+    }
+    if cfg.moe_shared_ff:
+        p["shared"] = {
+            "w_gate": L.dense(d, cfg.moe_shared_ff, dtype),
+            "w_up": L.dense(d, cfg.moe_shared_ff, dtype),
+            "w_down": L.dense(cfg.moe_shared_ff, d, dtype),
+        }
+        p["shared_gate"] = L.dense(d, 1, dtype)
+    return p
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    stacked = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+        layer_shapes(cfg, dtype),
+    )
+    p = {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dtype),
+        "final_norm": L.vec(cfg.d_model, dtype),
+        "layers": stacked,
+        "lm_head": L.dense(cfg.d_model, cfg.vocab, dtype),
+    }
+    return p
+
+
+def _expert_pad(cfg: ModelConfig, m_sz: int) -> int:
+    """Pad the expert count to a multiple of the model-axis size so the
+    expert dim shards cleanly (60→64, 40→48 on a 16-way axis); padding
+    experts get zero weights and are never routed to (the router only has
+    logits for real experts)."""
+    return -(-cfg.moe_experts // m_sz) * m_sz
+
+
+def _local_dispatch_ffn(cfg, xf, rw, wg, wu, wd, epm, owned_offset, cap):
+    """Single-device capacity-based dispatch for an expert chunk.
+
+    xf (T, d) tokens, rw (d, E) router, w* (epm, …) the owned expert chunk
+    starting at expert id ``owned_offset``.  All scatters/gathers here are
+    LOCAL (this runs inside shard_map or on one device) — GSPMD never has to
+    partition them, which is the whole point: the global-capacity scatter
+    does not partition (XLA replicates the full buffer).
+
+    Buffer-side formulation keeps memory O(epm·cap·d): token *indices* are
+    scattered into the buffer, token rows are gathered buffer-side, and the
+    combine is a buffer-side scatter-add.  Returns y (T, d): the summed
+    contribution of the owned experts only.
+    """
+    tg, d = xf.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    logits = (xf @ rw.astype(xf.dtype)).astype(jnp.float32)     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)                        # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    rel = ids - owned_offset                                    # (T, k)
+    own = (rel >= 0) & (rel < epm)
+    flat_rel = jnp.where(own, rel, epm).reshape(-1)             # epm = drop
+    flat_gate = jnp.where(own, gates, 0.0).reshape(-1)
+    src_tok = jnp.arange(tg * k, dtype=jnp.int32) // k
+
+    # position of each assignment within its expert queue
+    oh = (flat_rel[:, None] == jnp.arange(epm)[None, :]).astype(jnp.int32)
+    pos_all = jnp.cumsum(oh, axis=0) - oh                       # (T·k, epm)
+    pos = jnp.take_along_axis(
+        pos_all, jnp.minimum(flat_rel, epm - 1)[:, None], axis=1)[:, 0]
+    keep = (flat_rel < epm) & (pos < cap)
+    idx_e = jnp.where(keep, flat_rel, 0)
+    idx_c = jnp.where(keep, pos, cap)
+
+    # scatter token *ids* and gates into the buffer (drop row = cap)
+    buf_src = jnp.full((epm, cap + 1), tg, jnp.int32)
+    buf_src = buf_src.at[idx_e, idx_c].set(jnp.where(keep, src_tok, tg))
+    buf_gate = jnp.zeros((epm, cap + 1), jnp.float32)
+    buf_gate = buf_gate.at[idx_e, idx_c].set(jnp.where(keep, flat_gate, 0.0))
+
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    buf = xf_pad[buf_src]                                       # (epm, C+1, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg.astype(xf.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, wu.astype(xf.dtype))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd.astype(xf.dtype))
+
+    contrib = out_buf * buf_gate[..., None].astype(out_buf.dtype)
+    y = jnp.zeros((tg + 1, d), xf.dtype)
+    y = y.at[buf_src.reshape(-1)].add(
+        contrib.reshape(-1, d), mode="drop")
+    return y[:tg]
+
+
+def moe_ffn(cfg: ModelConfig, lp: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, d) → (B, S, d) via top-k routed experts.
+
+    Distribution (DESIGN.md: the paper's broadcast doctrine applied to EP):
+    tokens arrive sequence-sharded over \'model\'; each model rank ALL-GATHERS
+    its group\'s tokens (the query broadcast), runs the local expert chunk\'s
+    capacity-based dispatch entirely on-device (the local leaf scan), and the
+    per-rank partial outputs are REDUCE-SCATTERED back (the count psum).
+    Data-parallel rows replicate the expert weights; their gradients reduce
+    over \'data\' automatically through the shard_map transpose."""
+    from repro.parallel.sharding import current_mesh, excluded_axes
+    mesh = current_mesh()
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+
+    if mesh is None or "model" not in mesh.axis_names \
+            or mesh.shape["model"] == 1 or excluded_axes():
+        # single-device / no-EP path: one chunk holding every expert
+        xf = x.reshape(b * s, d)
+        cap = int(b * s * k * cfg.capacity_factor / e) + 1
+        y = _local_dispatch_ffn(
+            cfg, xf, lp["router"], lp["experts"]["w_gate"],
+            lp["experts"]["w_up"], lp["experts"]["w_down"],
+            epm=e, owned_offset=0, cap=cap)
+    else:
+        m_sz = mesh.shape["model"]
+        ep = _expert_pad(cfg, m_sz)
+        epm = ep // m_sz
+        wg, wu, wd = (lp["experts"][n] for n in ("w_gate", "w_up", "w_down"))
+        if ep != e:
+            padw = ((0, ep - e), (0, 0), (0, 0))
+            wg, wu, wd = (jnp.pad(w_, padw) for w_ in (wg, wu, wd))
+        dp_axes = tuple(a for a in ("pod", "data")
+                        if a in mesh.axis_names and a not in excluded_axes())
+        seq_sharded = s % m_sz == 0 and s > 1
+        x_spec = jax.sharding.PartitionSpec(
+            dp_axes or None, "model" if seq_sharded else None, None)
+        w_spec = jax.sharding.PartitionSpec("model", None, None)
+
+        def body(xl, rw, wgl, wul, wdl):
+            bl, sl, _ = xl.shape
+            if seq_sharded:
+                xg = jax.lax.all_gather(
+                    xl, "model", axis=1, tiled=True)        # (bl, S, d)
+            else:
+                xg = xl
+            tg = bl * xg.shape[1]
+            j = jax.lax.axis_index("model")
+            cap = int(tg * k * cfg.capacity_factor / e) + 1
+            y = _local_dispatch_ffn(
+                cfg, xg.reshape(tg, d), rw, wgl, wul, wdl,
+                epm=epm, owned_offset=j * epm, cap=cap)
+            y = y.reshape(bl, xg.shape[1], d)
+            if seq_sharded:
+                return jax.lax.psum_scatter(
+                    y, "model", scatter_dimension=1, tiled=True)
+            return jax.lax.psum(y, "model")
+
+        y = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(x_spec, jax.sharding.PartitionSpec(),
+                      w_spec, w_spec, w_spec),
+            out_specs=x_spec,
+            axis_names={"model"} | set(dp_axes), check_vma=False,
+        )(x, lp["router"], wg, wu, wd).reshape(b * s, d)
+        xf = x.reshape(b * s, d)
+
+    if cfg.moe_shared_ff:
+        sh = lp["shared"]
+        xf = shard(x.reshape(b * s, d), "tokens", None)
+        shared = L.mlp(xf, sh, cfg.act, True)
+        sg = jax.nn.sigmoid(
+            (xf @ lp["shared_gate"].astype(xf.dtype)).astype(jnp.float32))
+        y = y + shared * sg.astype(shared.dtype)
+    return y.reshape(b, s, d)
+
+
+def _block(cfg: ModelConfig, lp, x, cos, sin):
+    # see transformer.forward: pin the scan carry against convert hoisting
+    x = jax.lax.optimization_barrier(x)
+    x, kv = T.attn_block(cfg, lp, x, cos, sin, window=cfg.window)
+    h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + moe_ffn(cfg, lp, h)
+    return shard(x, "batch", "seq", None), kv
+
+
+def forward(cfg: ModelConfig, params, batch, *, return_cache: bool = False,
+            return_hidden: bool = False):
+    x = T.embed_tokens(cfg, params, batch)
+    cos, sin = T.rope_for(cfg, batch, x.shape[1])
+
+    body = lambda c, lp: _block(cfg, lp, c, cos, sin)
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, caches = L.segmented_scan(body, x, params["layers"], cfg.n_layers)
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, (k_, v_) = body(x, lp)
+            ks.append(k_)
+            vs.append(v_)
+        caches = (jnp.stack(ks), jnp.stack(vs))
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    logits = x @ params["lm_head"].astype(x.dtype)
+    logits = shard(logits, "batch", None, "tp")
+    if return_cache:
+        return logits, caches
+    return logits
+
+
+decode_state_shapes = T.decode_state_shapes
+
+
+def decode_step(cfg: ModelConfig, params, state, batch):
+    pos = batch["pos"]
+    x = T.embed_tokens(cfg, params, batch)
+    bsz = batch["tokens"].shape[0]
+    p = jnp.broadcast_to(pos[None, None], (bsz, 1)).astype(jnp.int32)
+    cos, sin = L.rope_cos_sin(p, cfg.head_dim, cfg.rope_theta)
+
+    def block(x, per_layer):
+        lp, kc, vc = per_layer
+        x, kc, vc = T.attn_block_decode(cfg, lp, x, cos, sin, kc, vc, pos,
+                                        window=cfg.window)
+        h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + moe_ffn(cfg, lp, h)
+        return x, (kc, vc)
+
+    if cfg.scan_layers:
+        x, (k_new, v_new) = jax.lax.scan(
+            block, x, (params["layers"], state["k"], state["v"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            per = jax.tree_util.tree_map(
+                lambda a: a[i], (params["layers"], state["k"], state["v"]))
+            x, (kc, vc) = block(x, per)
+            ks.append(kc)
+            vs.append(vc)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, {"k": k_new, "v": v_new}

@@ -1,0 +1,225 @@
+"""Mamba-1 selective-state-space model (falcon-mamba-7b).
+
+Attention-free: each block is  in_proj → causal depthwise conv → selective
+scan (input-dependent Δ, B, C; diagonal A) → gate → out_proj.
+
+TPU mapping of the recurrence: a *chunked* scan — ``lax.scan`` over sequence
+chunks carrying the (B, d_inner, n) state, with a parallel
+``lax.associative_scan`` inside each chunk.  This bounds activation memory to
+O(chunk · d_inner · n) while exposing intra-chunk parallelism to the VPU,
+the standard TPU-native formulation (vs. the CUDA kernel's warp-level scan,
+which has no TPU analogue — see DESIGN.md hardware-adaptation notes).
+
+Decode carries an O(1) recurrent state per layer: the conv tail (conv_width
+inputs) and the SSM state (d_inner × n) — this is why falcon-mamba runs the
+long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.base import ModelConfig
+from repro.parallel.sharding import shard
+
+SCAN_CHUNK = 256
+
+
+def layer_shapes(cfg: ModelConfig, dtype) -> dict:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    return {
+        "norm": L.vec(d, dtype),
+        "in_proj": L.dense(d, 2 * di, dtype),
+        "conv_w": jax.ShapeDtypeStruct((di, cfg.ssm_conv), dtype),
+        "conv_b": L.vec(di, dtype),
+        "x_proj": L.dense(di, r + 2 * n, dtype),
+        "dt_proj": L.dense(r, di, dtype),
+        "dt_proj_b": L.vec(di, dtype),
+        "A_log": jax.ShapeDtypeStruct((di, n), dtype),
+        "D": L.vec(di, dtype),
+        "out_proj": L.dense(di, d, dtype),
+    }
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    stacked = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+        layer_shapes(cfg, dtype),
+    )
+    return {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dtype),
+        "final_norm": L.vec(cfg.d_model, dtype),
+        "layers": stacked,
+        "lm_head": L.dense(cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv: x (B, S, di), w (di, K) → (B, S, di)."""
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, j: j + x.shape[1]] * w[:, j].astype(x.dtype) for j in range(k))
+    return y + b.astype(x.dtype)
+
+
+def _ssm_inputs(cfg, lp, x1):
+    """Input-dependent Δ (B,S,di), B̄ (B,S,n), C (B,S,n), A (di,n)."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    x_dbl = x1 @ lp["x_proj"].astype(x1.dtype)
+    dt, b_in, c_in = jnp.split(x_dbl, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(
+        (dt @ lp["dt_proj"].astype(dt.dtype)).astype(jnp.float32)
+        + lp["dt_proj_b"].astype(jnp.float32))
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))           # (di, n)
+    return delta, b_in.astype(jnp.float32), c_in.astype(jnp.float32), a
+
+
+def _chunked_selective_scan(delta, b_in, c_in, a, x1, h0):
+    """h_t = exp(Δ_t·A)·h_{t-1} + Δ_t·B_t·x_t ;  y_t = C_t·h_t.
+
+    delta (B,S,di) fp32, b_in/c_in (B,S,n), a (di,n), x1 (B,S,di),
+    h0 (B,di,n) fp32 → y (B,S,di) fp32, h_final."""
+    bsz, s, di = delta.shape
+    n = b_in.shape[-1]
+    chunk = min(SCAN_CHUNK, s)
+    pad = (-s) % chunk
+    if pad:
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        x1 = jnp.pad(x1, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+
+    def reshape_c(t):
+        return jnp.moveaxis(t.reshape(bsz, nc, chunk, *t.shape[2:]), 1, 0)
+
+    dl, bb, cc, xx = map(reshape_c, (delta, b_in, c_in, x1))
+
+    def chunk_step(h, inputs):
+        d_c, b_c, c_c, x_c = inputs                       # (B, ch, …)
+        da = jnp.exp(d_c[..., None] * a)                  # (B, ch, di, n)
+        dbx = (d_c * x_c.astype(jnp.float32))[..., None] * b_c[:, :, None, :]
+
+        def combine(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, br + ar * bl
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_t = a_cum * h[:, None] + b_cum                  # (B, ch, di, n)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_t, c_c)
+        return h_t[:, -1], y_c
+
+    h_f, ys = jax.lax.scan(chunk_step, h0, (dl, bb, cc, xx))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s + pad, di)[:, :s]
+    return y, h_f
+
+
+def block(cfg: ModelConfig, lp, x, h0=None):
+    """Full-sequence mamba block.  Returns (x_out, h_final)."""
+    bsz, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    h = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+    xz = h @ lp["in_proj"].astype(h.dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = shard(x1, "batch", None, "tp")
+    x1 = jax.nn.silu(_causal_conv(x1, lp["conv_w"], lp["conv_b"]))
+    delta, b_in, c_in, a = _ssm_inputs(cfg, lp, x1)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    y, h_f = _chunked_selective_scan(delta, b_in, c_in, a, x1, h0)
+    y = y + lp["D"].astype(jnp.float32) * x1.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ lp["out_proj"].astype(x.dtype)
+    return x + out, h_f
+
+
+def forward(cfg: ModelConfig, params, batch, *, return_cache: bool = False,
+            return_hidden: bool = False):
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"].astype(L.COMPUTE_DTYPE), tokens)
+    x = shard(x, "batch", "seq", None)
+
+    def body(x, lp):
+        # pin the scan carry against convert hoisting (see transformer)
+        x = jax.lax.optimization_barrier(x)
+        x, h_f = block(cfg, lp, x)
+        return shard(x, "batch", "seq", None), h_f
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, h_stack = L.segmented_scan(body, x, params["layers"],
+                                      cfg.n_layers)
+    else:
+        hs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, h_f = body(x, lp)
+            hs.append(h_f)
+        h_stack = jnp.stack(hs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    logits = x @ params["lm_head"].astype(x.dtype)
+    logits = shard(logits, "batch", None, "tp")
+    if return_cache:
+        return logits, h_stack
+    return logits
+
+
+def decode_state_shapes(cfg: ModelConfig, batch_size: int, seq_len: int,
+                        dtype=jnp.bfloat16) -> dict:
+    del seq_len  # O(1) state — the whole point of the SSM long_500k cell
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch_size, cfg.ssm_conv, cfg.d_inner), dtype),
+        "h": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch_size, cfg.d_inner, cfg.ssm_state),
+            jnp.float32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, state, batch):
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[batch["tokens"]]  # (B, 1, d)
+
+    def step(x, per_layer):
+        lp, conv_st, h_st = per_layer
+        hin = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+        xz = hin @ lp["in_proj"].astype(hin.dtype)
+        x1, z = jnp.split(xz, 2, axis=-1)                  # (B, 1, di)
+        conv_st = jnp.concatenate(
+            [conv_st[:, 1:], x1.astype(conv_st.dtype)], axis=1)
+        w = lp["conv_w"].astype(jnp.float32)               # (di, K)
+        x1c = jnp.einsum("bkd,dk->bd", conv_st.astype(jnp.float32), w)
+        x1c = jax.nn.silu(x1c + lp["conv_b"].astype(jnp.float32))
+        x1c = x1c[:, None].astype(x.dtype)                 # (B, 1, di)
+        delta, b_in, c_in, a = _ssm_inputs(cfg, lp, x1c)
+        da = jnp.exp(delta[:, 0, :, None] * a)             # (B, di, n)
+        dbx = (delta[:, 0] * x1c[:, 0].astype(jnp.float32))[..., None] \
+            * b_in[:, 0, None, :]
+        h_new = da * h_st + dbx
+        y = jnp.einsum("bdn,bn->bd", h_new, c_in[:, 0])
+        y = y + lp["D"].astype(jnp.float32) * x1c[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+        x = x + y @ lp["out_proj"].astype(x.dtype)
+        return x, (conv_st, h_new)
+
+    if cfg.scan_layers:
+        x, (conv_new, h_new) = jax.lax.scan(
+            step, x, (params["layers"], state["conv"], state["h"]))
+    else:
+        cs, hs = [], []
+        for i in range(cfg.n_layers):
+            per = jax.tree_util.tree_map(
+                lambda a: a[i],
+                (params["layers"], state["conv"], state["h"]))
+            x, (c_, h_) = step(x, per)
+            cs.append(c_)
+            hs.append(h_)
+        conv_new, h_new = jnp.stack(cs), jnp.stack(hs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, {"conv": conv_new, "h": h_new}

@@ -1,0 +1,261 @@
+"""Dense decoder-only transformer (llama/qwen family) + VLM backbone variant.
+
+Layers are stacked along a leading axis and iterated with ``lax.scan`` so the
+compiled HLO contains one layer body regardless of depth (essential for the
+512-device dry-run compile times); ``jax.checkpoint`` remats the block in
+training.  The VLM family (qwen2-vl) shares this module: M-RoPE position
+streams and stubbed patch embeddings are injected through the batch dict.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.base import ModelConfig
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def layer_shapes(cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    p = {
+        "attn_norm": L.vec(d, dtype),
+        "wq": L.dense(d, hq, dtype),
+        "wk": L.dense(d, hkv, dtype),
+        "wv": L.dense(d, hkv, dtype),
+        "wo": L.dense(hq, d, dtype),
+        "mlp_norm": L.vec(d, dtype),
+        "w_up": L.dense(d, cfg.d_ff, dtype),
+        "w_down": L.dense(cfg.d_ff, d, dtype),
+    }
+    if cfg.glu:
+        p["w_gate"] = L.dense(d, cfg.d_ff, dtype)
+    if cfg.qkv_bias:
+        p.update(wq_b=L.vec(hq, dtype), wk_b=L.vec(hkv, dtype),
+                 wv_b=L.vec(hkv, dtype))
+    return p
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    stacked = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+        layer_shapes(cfg, dtype),
+    )
+    p = {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dtype),
+        "final_norm": L.vec(cfg.d_model, dtype),
+        "layers": stacked,
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense(cfg.d_model, cfg.vocab, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: ModelConfig, lp: dict, h: jnp.ndarray):
+    b, s, _ = h.shape
+    hd = cfg.head_dim
+    q = h @ L.wcast(lp["wq"], h.dtype)
+    k = h @ L.wcast(lp["wk"], h.dtype)
+    v = h @ L.wcast(lp["wv"], h.dtype)
+    if cfg.qkv_bias:
+        q = q + lp["wq_b"].astype(h.dtype)
+        k = k + lp["wk_b"].astype(h.dtype)
+        v = v + lp["wv_b"].astype(h.dtype)
+    q = shard(q.reshape(b, s, cfg.n_heads, hd), "batch", None, "tp", None)
+    k = shard(k.reshape(b, s, cfg.n_kv_heads, hd), "batch", None, "tp", None)
+    v = shard(v.reshape(b, s, cfg.n_kv_heads, hd), "batch", None, "tp", None)
+    return q, k, v
+
+
+def attn_block(cfg: ModelConfig, lp: dict, x: jnp.ndarray, cos, sin,
+               *, window: int = 0):
+    """Full-sequence (train/prefill) attention sub-block.  Returns the
+    residual-updated activations and this layer's (k, v) for cache capture."""
+    h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, lp, h)
+    q = L.apply_rotary(q, cos, sin)
+    k = L.apply_rotary(k, cos, sin)
+    o = L.gqa_attention(q, k, v, causal=True, window=window)
+    b, s, _, _ = o.shape
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    x = x + o @ L.wcast(lp["wo"], x.dtype)
+    return x, (k, v)
+
+
+def attn_block_decode(cfg: ModelConfig, lp: dict, x, cos, sin,
+                      k_cache, v_cache, pos, *, window: int = 0):
+    """One-token decode attention against a (B, Smax, Hkv, hd) cache slice."""
+    h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, lp, h)            # S == 1
+    q = L.apply_rotary(q, cos, sin)
+    k = L.apply_rotary(k, cos, sin)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, pos, 0, 0))
+    t = k_cache.shape[1]
+    ki = jnp.arange(t)
+    valid = ki <= pos
+    if window:
+        valid &= ki > pos - window
+    o = L.gqa_attention(q, k_cache, v_cache, causal=False,
+                        kv_valid=jnp.broadcast_to(valid, (x.shape[0], t)))
+    o = o.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    x = x + o @ lp["wo"].astype(x.dtype)
+    return x, k_cache, v_cache
+
+
+def mlp_block(cfg: ModelConfig, lp: dict, x: jnp.ndarray):
+    h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    return x + L.mlp(h, lp, cfg.act, cfg.glu)
+
+
+def _block_train(cfg: ModelConfig, lp, x, cos, sin):
+    x, _ = attn_block(cfg, lp, x, cos, sin, window=cfg.window)
+    x = mlp_block(cfg, lp, x)
+    return shard(x, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / positions
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"].astype(L.COMPUTE_DTYPE), tokens)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # Stubbed modality frontend: precomputed patch embeddings occupy the
+        # first `num_patches` positions of the sequence.
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+    return shard(x, "batch", "seq", None)
+
+
+def rope_for(cfg: ModelConfig, batch, seq_len: int, offset=0):
+    if cfg.family == "vlm" and "pos_ids" in batch:
+        return L.mrope_cos_sin(batch["pos_ids"], cfg.head_dim, cfg.rope_theta,
+                               cfg.mrope_sections)
+    b = batch["tokens"].shape[0]
+    pos = jnp.arange(seq_len, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (b, seq_len))
+    return rope_cos_sin_cached(pos, cfg.head_dim, cfg.rope_theta)
+
+
+def rope_cos_sin_cached(pos, head_dim, theta):
+    return L.rope_cos_sin(pos, head_dim, theta)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / decode
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params, batch, *, return_cache: bool = False,
+            return_hidden: bool = False):
+    """Logits over the full sequence; optionally the per-layer (k, v) cache
+    stack (prefill), or the final-norm hidden states (chunked loss)."""
+    x = embed_tokens(cfg, params, batch)
+    cos, sin = rope_for(cfg, batch, x.shape[1])
+
+    def block(x, lp):
+        # pin the carry inside the loop: without this XLA hoists the
+        # bf16->f32 convert of the whole (L, B, S, d) saved-carry stack out
+        # of the backward while-loop (measured 10.7 GB extra on qwen2-vl-72b)
+        x = jax.lax.optimization_barrier(x)
+        x, kv = attn_block(cfg, lp, x, cos, sin, window=cfg.window)
+        x = mlp_block(cfg, lp, x)
+        return shard(x, "batch", "seq", None), kv
+
+    body = block
+    if cfg.remat:
+        body = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.scan_layers:
+        x, caches = L.segmented_scan(
+            lambda c, lp: body(c, lp), x, params["layers"], cfg.n_layers)
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, (k, v) = body(x, lp)
+            ks.append(k)
+            vs.append(v)
+        caches = (jnp.stack(ks), jnp.stack(vs))
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    head = params.get("lm_head")
+    if head is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = x @ head.astype(x.dtype)
+    logits = shard(logits, "batch", None, "tp")
+    if return_cache:
+        return logits, caches
+    return logits
+
+
+def decode_state_shapes(cfg: ModelConfig, batch_size: int, seq_len: int,
+                        dtype=jnp.bfloat16) -> dict:
+    kv = jax.ShapeDtypeStruct(
+        (cfg.n_layers, batch_size, seq_len, cfg.n_kv_heads, cfg.head_dim),
+        dtype)
+    return {"k": kv, "v": kv}
+
+
+def decode_step(cfg: ModelConfig, params, state: dict, batch: dict):
+    """One-token decode: batch = {tokens (B,1), pos scalar int32, [pos_ids]}.
+    Returns (logits (B,1,V), new_state)."""
+    pos = batch["pos"]
+    x = embed_tokens(cfg, params, batch)
+    if cfg.family == "vlm" and "pos_ids" in batch:
+        cos, sin = L.mrope_cos_sin(batch["pos_ids"], cfg.head_dim,
+                                   cfg.rope_theta, cfg.mrope_sections)
+    else:
+        b = batch["tokens"].shape[0]
+        p = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+        cos, sin = L.rope_cos_sin(p, cfg.head_dim, cfg.rope_theta)
+
+    def block(x, per_layer):
+        lp, kc, vc = per_layer
+        x, kc, vc = attn_block_decode(cfg, lp, x, cos, sin, kc, vc, pos,
+                                      window=cfg.window)
+        x = mlp_block(cfg, lp, x)
+        return x, (kc, vc)
+
+    if cfg.scan_layers:
+        x, (k_new, v_new) = jax.lax.scan(
+            block, x, (params["layers"], state["k"], state["v"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            per = jax.tree_util.tree_map(
+                lambda a: a[i], (params["layers"], state["k"], state["v"]))
+            x, (kc, vc) = block(x, per)
+            ks.append(kc)
+            vs.append(vc)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = x @ head.astype(x.dtype)
+    return logits, {"k": k_new, "v": v_new}

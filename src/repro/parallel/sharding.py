@@ -1,0 +1,205 @@
+"""Logical-axis sharding rules and the mesh context.
+
+The framework follows the paper's communication doctrine (DESIGN.md Sec 4):
+replicate what is small and shared, shard what is bulky along a contiguous
+axis, reduce fixed-size partials.  Concretely:
+
+logical axes → mesh axes
+    batch   → ('pod', 'data')   data parallelism (cross-pod DP by default)
+    fsdp    → 'data'            parameter/optimizer-state sharding (ZeRO-3)
+    tp      → 'model'           tensor parallelism (heads·head_dim / ffn dims)
+    seq     → 'model'           sequence sharding (KV caches for decode)
+    expert  → 'model'           expert parallelism for MoE layers
+    stage   → 'pod'             pipeline stages (optional PP mode)
+
+Rules degrade gracefully: axes missing from the active mesh are dropped, and
+an axis whose size does not divide the tensor dimension is dropped too (GSPMD
+could pad, but padding a batch of 1 across 32 devices is pure waste — the
+long_500k cells hit exactly this).
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "tokens": ("pod", "data", "model"),  # flattened B·S token streams
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "seq": ("model",),
+    "expert": ("model",),
+    "stage": ("pod",),
+}
+
+_ctx = threading.local()
+
+
+def set_current_mesh(mesh: Mesh | None) -> None:
+    _ctx.mesh = mesh
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_ctx, "mesh", None)
+
+
+class use_mesh:
+    def __init__(self, mesh: Mesh | None):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = current_mesh()
+        set_current_mesh(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_current_mesh(self.prev)
+
+
+def set_excluded_axes(axes: frozenset[str]) -> None:
+    """Mesh axes that logical rules must not use — e.g. 'pod' while it serves
+    as the manual pipeline-stage axis inside a shard_map."""
+    _ctx.excluded = axes
+
+
+def excluded_axes() -> frozenset[str]:
+    return getattr(_ctx, "excluded", frozenset())
+
+
+class exclude_axes:
+    def __init__(self, axes):
+        self.axes = frozenset(axes)
+
+    def __enter__(self):
+        self.prev = excluded_axes()
+        set_excluded_axes(self.prev | self.axes)
+
+    def __exit__(self, *exc):
+        set_excluded_axes(self.prev)
+
+
+def gather_safe_mode() -> bool:
+    """True inside partial-manual shard_map regions (pipeline / compressed
+    cross-pod), where XLA's SPMD partitioner CHECK-fails on vocab-sharded
+    gathers (xla spmd_partitioner_util.cc:504, subgroup-manual +
+    PartitionGather).  Embedding lookups switch to a one-hot matmul there —
+    the contraction partitions cleanly."""
+    return bool(excluded_axes())
+
+
+def resolve_axes(logical: str | None, mesh: Mesh) -> tuple[str, ...]:
+    """Logical name → the subset of its mesh axes present in `mesh`."""
+    if logical is None:
+        return ()
+    excl = excluded_axes()
+    return tuple(a for a in LOGICAL_RULES[logical]
+                 if a in mesh.axis_names and a not in excl)
+
+
+def logical_to_spec(
+    spec: tuple[str | None, ...], mesh: Mesh, shape: tuple[int, ...] | None = None
+) -> P:
+    """Resolve a logical spec to a PartitionSpec on `mesh`.
+
+    If `shape` is given, mesh axes whose product does not divide the
+    corresponding dimension are dropped (no silent GSPMD padding).
+    """
+    out = []
+    for i, name in enumerate(spec):
+        axes = resolve_axes(name, mesh)
+        if shape is not None and axes:
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            while axes and shape[i] % size != 0:
+                axes = axes[:-1]
+                size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint using logical axis names; no-op without a mesh
+    (single-device smoke tests) or on a 1-device mesh."""
+    mesh = current_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    spec = logical_to_spec(tuple(logical), mesh, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-regex → logical spec).
+# ---------------------------------------------------------------------------
+# Matched against the '/'-joined pytree path of each parameter leaf.  The
+# first matching rule wins; specs apply to the *trailing* dims of the leaf
+# (stacked-layer leading dims are replicated).
+
+PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"embed",                    ("tp", "fsdp")),       # (vocab, d)
+    (r"lm_head",                  ("fsdp", "tp")),       # (d, vocab)
+    (r"(wq|wk|wv|qkv)(_b)?$",     ("fsdp", "tp")),       # (d, heads*hd)
+    (r"wo$",                      ("tp", "fsdp")),       # (heads*hd, d)
+    (r"(w_gate|w_up)$",           ("fsdp", "tp")),       # (d, ff)
+    (r"w_down$",                  ("tp", "fsdp")),       # (ff, d)
+    (r"router$",                  ("fsdp", None)),       # (d, E)
+    (r"experts/(w_gate|w_up)",    ("expert", "fsdp", None)),  # (E, d, f)
+    (r"experts/w_down",           ("expert", None, "fsdp")),  # (E, f, d)
+    (r"shared/(w_gate|w_up)$",    ("fsdp", "tp")),
+    (r"shared/w_down$",           ("tp", "fsdp")),
+    (r"in_proj$",                 ("fsdp", "tp")),       # mamba (d, 2*d_inner)
+    (r"conv_w$",                  ("tp", None)),         # (d_inner, conv)
+    (r"conv_b$",                  ("tp",)),
+    (r"x_proj$",                  ("tp", None)),         # (d_inner, dt_rank+2n)
+    (r"dt_proj(_b)?$",            (None, "tp")),         # (dt_rank, d_inner)
+    (r"A_log$",                   ("tp", None)),         # (d_inner, n)
+    (r"D$",                       ("tp",)),
+    (r"out_proj$",                ("tp", "fsdp")),       # (d_inner, d)
+    (r"(rg_x|rg_gate)$",          ("fsdp", "tp")),       # griffin (d, width)
+    (r"(rg_out)$",                ("tp", "fsdp")),       # (width, d)
+    (r"(lambda_p|rg_a_w|rg_i_w)$", ("tp",) * 1),         # (width,) gates
+    (r"rg_a_b$|rg_i_b$",          ("tp",)),
+    (r"pos_embed",                (None, "fsdp")),       # (S, d)
+    (r"(bias|_b)$",               ("tp",)),              # 1-D biases on tp dim
+    (r"norm|scale",               (None,)),              # replicated norms
+]
+
+
+def spec_for_path(path: str, ndim: int) -> tuple[str | None, ...]:
+    for pat, spec in PARAM_RULES:
+        if re.search(pat, path):
+            if len(spec) > ndim:
+                spec = spec[-ndim:] if ndim > 0 else ()
+            return (None,) * (ndim - len(spec)) + tuple(spec)
+    return (None,) * ndim
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpec matching `params` (works on ShapeDtypeStructs)."""
+
+    def leaf_spec(path, leaf):
+        logical = spec_for_path(_path_str(path), leaf.ndim)
+        return logical_to_spec(logical, mesh, tuple(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh)
+    )

@@ -1,0 +1,124 @@
+"""Serving substrate: jitted prefill/decode steps and a batched greedy
+generation driver.
+
+Decode follows the paper's communication doctrine applied to KV caches
+(DESIGN.md Sec 4): the cache — the bulky read-only array — is sharded along
+its sequence axis over the 'model' mesh axis ('seq' logical axis), queries
+(the new token) are broadcast, and the attention softmax reduction plays the
+role of the count psum.  Batch is sharded over ('pod','data').  This is the
+layout the decode_32k / long_500k dry-run cells compile.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import api
+from repro.models.base import ModelConfig
+from repro.parallel.sharding import (
+    logical_to_spec, param_shardings, use_mesh)
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, state_shapes: Any):
+    """KV caches: (L, B, S, H, hd) → batch over dp axes, seq over 'model'.
+    Recurrent states: width over 'model'."""
+
+    def spec_of(path, sds):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if sds.ndim == 5:            # (L, B, S, Hkv, hd) attention cache
+            logical = (None, "batch", "seq", None, None)
+        elif sds.ndim == 4:          # (L, B, conv, d_inner) ssm conv state
+            logical = (None, "batch", None, "tp")
+        elif sds.ndim == 3:          # (L, B, width) rglru state
+            logical = (None, "batch", "tp")
+        elif name.endswith("h") and sds.ndim == 4:
+            logical = (None, "batch", "tp", None)
+        else:
+            logical = (None,) * sds.ndim
+        return NamedSharding(mesh, logical_to_spec(logical, mesh, sds.shape))
+
+    return jax.tree_util.tree_map_with_path(spec_of, state_shapes)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_shapes: dict):
+    out = {}
+    for k, sds in batch_shapes.items():
+        if k == "pos_ids":
+            spec = logical_to_spec((None, "batch", None), mesh, sds.shape)
+        elif sds.ndim >= 2:
+            spec = logical_to_spec(
+                ("batch",) + (None,) * (sds.ndim - 1), mesh, sds.shape)
+        else:
+            spec = P()
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, batch_size: int,
+                     seq_len: int, dtype=jnp.bfloat16):
+    """Jitted one-token decode step with explicit in/out shardings.
+    This is what the decode_32k / long_500k dry-run cells lower."""
+    p_shapes = api.param_shapes(cfg, dtype)
+    p_sh = param_shardings(p_shapes, mesh)
+    st_shapes = api.decode_state_shapes(cfg, batch_size, seq_len, dtype)
+    st_sh = state_shardings(cfg, mesh, st_shapes)
+    b_shapes = api.decode_batch_shapes(cfg, batch_size)
+    b_sh = batch_shardings(cfg, mesh, b_shapes)
+
+    def step(params, state, batch):
+        return api.decode_step(cfg, params, state, batch)
+
+    fn = jax.jit(step, in_shardings=(p_sh, st_sh, b_sh),
+                 out_shardings=(None, st_sh), donate_argnums=(1,))
+    return fn, p_shapes, st_shapes, b_shapes
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, batch_size: int,
+                      seq_len: int, dtype=jnp.bfloat16):
+    """Jitted full-sequence forward (prefill_32k dry-run cells).
+
+    Serving prefill needs only the last position's logits (the first sampled
+    token) — materialising (B, 32768, vocab) logits would waste HBM, so the
+    head applies to the final hidden state only."""
+    p_shapes = api.param_shapes(cfg, dtype)
+    p_sh = param_shardings(p_shapes, mesh)
+    b_shapes = api.train_batch_shapes(cfg, batch_size, seq_len)
+    b_sh = batch_shardings(cfg, mesh, b_shapes)
+
+    def step(params, batch):
+        hidden = api.forward(cfg, params, batch, return_hidden=True)
+        return api._head_logits(cfg, params, hidden[:, -1:])
+
+    fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+    return fn, p_shapes, b_shapes
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: np.ndarray,
+                    num_steps: int, mesh: Mesh | None = None,
+                    max_seq: int = 256) -> np.ndarray:
+    """Greedy decoding driver: feeds the prompt teacher-forced through the
+    decode path, then samples argmax continuations.  Uniform across all
+    families (attention caches, SSM states, ring buffers)."""
+    b, p_len = prompt.shape
+    state = api.init_decode_state(cfg, b, max_seq,
+                                  dtype=jnp.float32)
+    out = np.array(prompt, dtype=np.int32)
+    with use_mesh(mesh):
+        tok = jnp.asarray(prompt[:, :1])
+        for pos in range(p_len + num_steps - 1):
+            batch = {"tokens": tok, "pos": jnp.asarray(pos, jnp.int32)}
+            if cfg.family == "vlm":
+                batch["pos_ids"] = jnp.full((3, b, 1), pos, jnp.int32)
+            logits, state = api.decode_step(cfg, params, state, batch)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            if pos + 1 < p_len:
+                tok = jnp.asarray(out[:, pos + 1: pos + 2])
+            else:
+                tok = nxt[:, None]
+                out = np.concatenate([out, np.asarray(tok)], axis=1)
+    return out

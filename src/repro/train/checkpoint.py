@@ -1,0 +1,128 @@
+"""Checkpointing: sharded-array save/restore with manifest, auto-resume and
+elastic re-sharding.
+
+Format: one directory per step —
+
+    <dir>/step_<N>/arrays.npz      flattened path → array
+    <dir>/step_<N>/manifest.json   step, arch, leaf inventory, written flag
+
+Writes are atomic at the directory level (write to ``.tmp`` then rename), so
+a crash mid-save never corrupts the latest checkpoint — the fault-tolerance
+test kills a run between steps and restarts it bit-exactly.
+
+Elasticity: arrays are stored logically (fully assembled); ``restore`` lays
+them out on *any* mesh via ``device_put`` with the target sharding, so a job
+checkpointed on 512 devices restarts on 256 (or 8) without conversion.  On a
+real multi-host system assembly would stream through per-host shard files;
+the manifest layout already carries per-leaf shape/dtype to support that.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.parallel.sharding import param_shardings
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_like(tree_like: Any, arrays: dict[str, np.ndarray]) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, like in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        a = arrays[key]
+        assert tuple(a.shape) == tuple(like.shape), (key, a.shape, like.shape)
+        leaves.append(a.astype(like.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(dir_: str, step: int, params: Any, opt_state: Any,
+         metadata: dict) -> str:
+    final = os.path.join(dir_, f"step_{step}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {f"params/{k}": v for k, v in _flatten(params).items()}
+    arrays.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = dict(metadata)
+    manifest["leaves"] = {k: [list(v.shape), str(v.dtype)]
+                          for k, v in arrays.items()}
+    manifest["complete"] = True
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(dir_: str) -> int | None:
+    if not os.path.isdir(dir_):
+        return None
+    steps = []
+    for name in os.listdir(dir_):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            mf = os.path.join(dir_, name, "manifest.json")
+            if os.path.exists(mf):
+                with open(mf) as f:
+                    if json.load(f).get("complete"):
+                        steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(dir_: str, step: int, *, mesh: Mesh | None = None,
+            abstract_params: Any = None) -> tuple[Any, Any, dict]:
+    """Returns (params, opt_state, metadata).  With `mesh` +
+    `abstract_params`, parameters and optimizer state are placed with the
+    target mesh's shardings (elastic restart)."""
+    path = os.path.join(dir_, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    p_arr = {k[len("params/"):]: data[k] for k in data.files
+             if k.startswith("params/")}
+    o_arr = {k[len("opt/"):]: data[k] for k in data.files
+             if k.startswith("opt/")}
+
+    if abstract_params is not None:
+        params = _unflatten_like(abstract_params, p_arr)
+        opt_like = {
+            "m": jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                abstract_params),
+            "v": jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                abstract_params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        opt_state = _unflatten_like(opt_like, o_arr)
+    else:  # raw dicts
+        params, opt_state = p_arr, o_arr
+
+    if mesh is not None and abstract_params is not None:
+        p_sh = param_shardings(abstract_params, mesh)
+        params = jax.device_put(params, p_sh)
+        opt_state = {
+            "m": jax.device_put(opt_state["m"], p_sh),
+            "v": jax.device_put(opt_state["v"], p_sh),
+            "step": jax.device_put(opt_state["step"]),
+        }
+    return params, opt_state, meta

@@ -1,0 +1,162 @@
+"""Unit + property tests for host-side R-tree construction (paper Sec III)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cpu_baseline, rtree
+from repro.core.types import EMPTY_RECT, rect_overlap_np
+from repro.data import spider
+from repro.kernels import ref
+
+
+def _rand_rects(n, seed=0, scale=1000):
+    rng = np.random.default_rng(seed)
+    lo = rng.integers(0, scale, (n, 2))
+    sz = rng.integers(0, scale // 10 + 1, (n, 2))
+    return np.concatenate([lo, lo + sz], axis=1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# STR 3-level construction invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,b,f", [(1, 4, 2), (7, 4, 2), (64, 8, 4),
+                                   (1000, 16, 8), (999, 7, 3)])
+def test_str_tree_invariants(n, b, f):
+    rects = _rand_rects(n, seed=n)
+    t = rtree.build_str_3level(rects, leaf_capacity=b, fanout=f)
+
+    # Every input rect appears in exactly one leaf slot.
+    got = []
+    for j in range(t.num_leaves):
+        c = int(t.leaf_counts[j])
+        assert 0 < c <= b
+        got.append(np.asarray(t.leaf_rects)[j, :c])
+        # padding slots are the sentinel
+        assert (np.asarray(t.leaf_rects)[j, c:] == EMPTY_RECT).all()
+    got = np.concatenate(got)
+    assert got.shape == rects.shape
+    assert (np.sort(got.view([("", np.int32)] * 4), axis=0)
+            == np.sort(rects.view([("", np.int32)] * 4), axis=0)).all()
+
+    # Leaf MBRs contain their rects; level-1 MBRs contain child leaf MBRs;
+    # root contains everything.
+    for j in range(t.num_leaves):
+        c = int(t.leaf_counts[j])
+        r = np.asarray(t.leaf_rects)[j, :c]
+        m = np.asarray(t.leaf_mbrs)[j]
+        assert (r[:, 0] >= m[0]).all() and (r[:, 2] <= m[2]).all()
+        assert (r[:, 1] >= m[1]).all() and (r[:, 3] <= m[3]).all()
+    starts = np.asarray(t.l1_child_start)
+    counts = np.asarray(t.l1_child_count)
+    # BFS contiguity: child ranges exactly partition [0, L)
+    assert starts[0] == 0
+    assert (starts[1:] == starts[:-1] + counts[:-1]).all()
+    assert starts[-1] + counts[-1] == t.num_leaves
+    for i in range(t.num_l1):
+        m = np.asarray(t.l1_mbrs)[i]
+        ch = np.asarray(t.leaf_mbrs)[starts[i]: starts[i] + counts[i]]
+        assert (ch[:, 0] >= m[0]).all() and (ch[:, 2] <= m[2]).all()
+        assert counts[i] <= f
+    rm = np.asarray(t.root_mbr)
+    l1 = np.asarray(t.l1_mbrs)
+    assert (l1[:, 0] >= rm[0]).all() and (l1[:, 3] <= rm[3]).all()
+
+
+def test_sn_records_layout():
+    rects = _rand_rects(300, seed=3)
+    t = rtree.build_str_3level(rects, leaf_capacity=8, fanout=4)
+    sn = rtree.to_sn_records(t)
+    # leaf level begins at 1 + SN[0].count (paper Sec III-C.2)
+    leaf_base = 1 + int(sn[0]["count"])
+    assert leaf_base == 1 + t.num_l1
+    assert (sn[leaf_base:]["isLeaf"] == 1).all()
+    assert (sn[1:leaf_base]["isLeaf"] == 0).all()
+    # level-1 children indices point into the leaf region contiguously
+    for i in range(t.num_l1):
+        cc = int(sn[1 + i]["count"])
+        ch = sn[1 + i]["children"][:cc]
+        assert (np.diff(ch) == 1).all()
+        assert ch.min() >= leaf_base
+
+
+def test_choose_parameters_three_levels():
+    for n in [1000, 999_000, 8_400_000, 16_000_000]:
+        for d in [8, 256, 512, 2540]:
+            b, f = rtree.choose_parameters(n, d)
+            leaves = -(-n // b)
+            assert leaves >= min(d, n)          # work for every device
+            c1 = -(-leaves // f)
+            assert 1 <= c1 <= 512               # compact broadcast prefix
+
+
+# ---------------------------------------------------------------------------
+# Query correctness: CPU baseline == brute force
+# ---------------------------------------------------------------------------
+
+def test_cpu_baseline_matches_bruteforce():
+    rects = _rand_rects(500, seed=5)
+    queries = _rand_rects(64, seed=6, scale=1200)
+    t = rtree.build_str_3level(rects, leaf_capacity=8, fanout=4)
+    expected = ref.overlap_counts_np(queries, rects)
+    assert (cpu_baseline.sequential_query(t, queries) == expected).all()
+    assert (cpu_baseline.parallel_query(t, queries, num_threads=4,
+                                        chunk_size=7) == expected).all()
+
+
+def test_topdown_matches_bruteforce():
+    rects = _rand_rects(400, seed=8)
+    queries = _rand_rects(32, seed=9, scale=1200)
+    root = rtree.build_fanout_constrained(rects, num_devices=8, leaf_capacity=16)
+    subs = rtree.subtree_partitions(root, 8)
+    assert sum(s.count_rects() for s in subs) == 400
+    expected = ref.overlap_counts_np(queries, rects)
+    got = np.array([
+        sum(cpu_baseline.search_topdown(s, q) for s in subs) for q in queries
+    ])
+    assert (got == expected).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 120),
+    b=st.integers(1, 9),
+    f=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_counts_match(n, b, f, seed):
+    rng = np.random.default_rng(seed)
+    lo = rng.integers(-50, 50, (n, 2))
+    sz = rng.integers(0, 30, (n, 2))        # degenerate (zero-area) allowed
+    rects = np.concatenate([lo, lo + sz], axis=1).astype(np.int32)
+    queries = rects[rng.choice(n, size=min(n, 16))].copy()
+    t = rtree.build_str_3level(rects, leaf_capacity=b, fanout=f)
+    expected = ref.overlap_counts_np(queries, rects)
+    got = cpu_baseline.sequential_query(t, queries)
+    assert (got == expected).all()
+    # a query equal to a data rect always finds at least itself
+    assert (got >= 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", sorted(spider.DISTRIBUTIONS))
+def test_spider_distributions_valid(dist):
+    r = spider.generate(dist, 2000, seed=1)
+    assert r.shape == (2000, 4) and r.dtype == np.int32
+    assert (r[:, 0] <= r[:, 2]).all() and (r[:, 1] <= r[:, 3]).all()
+    assert r.min() >= 0 and r.max() <= spider.SCALE
+    # determinism
+    r2 = spider.generate(dist, 2000, seed=1)
+    assert (r == r2).all()
+
+
+def test_query_workload_fractions():
+    from repro.data import datasets
+    rects = spider.uniform(10_000, seed=2)
+    q = datasets.make_queries(rects, 0.05)
+    assert q.shape == (500, 4)
+    assert (q[:, 0] <= q[:, 2]).all()
+    assert rect_overlap_np(q[:5, None, :], rects[None, :, :]).any()
