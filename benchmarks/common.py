@@ -14,6 +14,8 @@ import numpy as np
 
 import jax
 
+from repro import compat
+
 # scaled-down dataset sizes (paper sizes in comments)
 SCALED = {
     "sports": 60_000,       # 999K
@@ -45,5 +47,4 @@ def emit(name: str, seconds: float, derived: str = "") -> None:
 
 
 def mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))

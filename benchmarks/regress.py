@@ -1,0 +1,243 @@
+"""Perf-regression harness for the device-resident query pipeline.
+
+Runs on small synthetic data (container-friendly) and writes
+``BENCH_pipeline.json`` at the repo root so the perf trajectory is tracked
+PR-over-PR (DESIGN.md Sec 9).  Three groups:
+
+* ``pipeline``  — A/B of the current BroadcastEngine against a vendored
+  replica of the pre-cache engine (per-batch host staging, fixed 1024-query
+  scan chunk, per-batch host sync).  The headline row is the sustained
+  small-batch serving workload; a bulk paper-style batch row rides along.
+  Outputs are asserted bit-equal before any timing is reported.
+* ``build``     — vectorized STR bulk load vs the original per-leaf Python
+  packing loops.
+* ``tile_sweep`` / ``batch_breakdown`` — the fig9/fig10 benches scaled to
+  the synthetic workload: modeled tile arithmetic intensity plus measured
+  per-batch kernel time and modeled transfer slices.
+
+Usage: ``PYTHONPATH=src:. python -m benchmarks.regress`` (or via
+``benchmarks/run.py --only regress``).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro import compat
+from repro.core import engine as beng
+from repro.core import rtree
+from repro.core.types import EMPTY_RECT, SerializedRTree, mbr_of
+from repro.data import datasets, spider
+from repro.kernels import ref as kref
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_pipeline.json")
+
+HOST_BW = 8e9    # UPMEM host link, fig10 model
+ICI_BW = 50e9    # TPU interconnect, fig10 model
+
+TILES = ((64, 256), (128, 512), (256, 1024), (512, 1024), (512, 2048),
+         (1024, 2048))
+
+
+# ---------------------------------------------------------------------------
+# Vendored pre-cache engine (the seed's batch loop, verbatim semantics):
+# Phase-1 mask materialized as a (Q, Kmax) boolean per batch, Phase-2 through
+# the fixed-1024-chunk reference scan, one device_put + one forced host sync
+# per batch.  Kept here — not in the library — purely as the regression
+# baseline.
+# ---------------------------------------------------------------------------
+
+
+class _LegacyBroadcastEngine:
+    def __init__(self, tree: SerializedRTree, mesh, *, batch_size: int):
+        self.batch_size = int(batch_size)
+        d = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        self.layout = beng.shard_tree(tree, d)
+        axes = tuple(mesh.axis_names)
+        p_leaf = jax.sharding.PartitionSpec(axes)
+        p_rep = jax.sharding.PartitionSpec()
+
+        def shard_fn(local_rects, local_cover, queries):
+            cover = local_cover.reshape(-1, 4)
+            m = kref.rect_overlap(
+                queries[:, None, :], cover[None, :, :]).any(axis=1)
+            counts = kref.overlap_counts_ref(
+                queries, local_rects, query_chunk=1024)
+            counts = jnp.where(m, counts, 0).astype(jnp.int32)
+            return jax.lax.psum(counts, axes)
+
+        self._step = jax.jit(compat.shard_map(
+            shard_fn, mesh=mesh, in_specs=(p_leaf, p_leaf, p_rep),
+            out_specs=p_rep, check_vma=False))
+        leaf_sh = jax.sharding.NamedSharding(mesh, p_leaf)
+        self._rep_sh = jax.sharding.NamedSharding(mesh, p_rep)
+        self.leaf_rects = jax.device_put(self.layout.leaf_rects_flat, leaf_sh)
+        self.cover_mbrs = jax.device_put(self.layout.cover_mbrs, leaf_sh)
+
+    def query(self, queries: np.ndarray) -> np.ndarray:
+        queries = np.asarray(queries, dtype=np.int32)
+        q, bs = queries.shape[0], self.batch_size
+        out = np.empty(q, dtype=np.int32)
+        for lo in range(0, q, bs):
+            hi = min(lo + bs, q)
+            batch = queries[lo:hi]
+            if hi - lo < bs:
+                batch = np.concatenate(
+                    [batch, np.tile(EMPTY_RECT, (bs - (hi - lo), 1))])
+            dev_batch = jax.device_put(batch, self._rep_sh)
+            counts = self._step(self.leaf_rects, self.cover_mbrs, dev_batch)
+            out[lo:hi] = np.asarray(counts)[: hi - lo]   # per-batch sync
+        return out
+
+
+def _legacy_build_str_3level(rects, leaf_capacity, fanout):
+    """The seed's per-leaf/per-node Python packing loops, vendored for the
+    build A/B."""
+    rects = np.asarray(rects, dtype=np.int32)
+    n = rects.shape[0]
+    b, f = int(leaf_capacity), int(fanout)
+    order = rtree.str_pack(rects, b)
+    packed = rects[order]
+    num_leaves = math.ceil(n / b)
+    leaf_rects = np.tile(EMPTY_RECT, (num_leaves, b, 1))
+    leaf_counts = np.zeros(num_leaves, dtype=np.int32)
+    for j in range(num_leaves):
+        lo, hi = j * b, min((j + 1) * b, n)
+        leaf_rects[j, : hi - lo] = packed[lo:hi]
+        leaf_counts[j] = hi - lo
+    leaf_mbrs = np.tile(EMPTY_RECT, (num_leaves, 1))
+    for j in range(num_leaves):
+        if leaf_counts[j]:
+            leaf_mbrs[j] = mbr_of(leaf_rects[j, : leaf_counts[j]])
+    l1_order = rtree.str_pack(leaf_mbrs, f)
+    leaf_rects = leaf_rects[l1_order]
+    leaf_counts = leaf_counts[l1_order]
+    leaf_mbrs = leaf_mbrs[l1_order]
+    num_l1 = math.ceil(num_leaves / f)
+    l1_mbrs = np.tile(EMPTY_RECT, (num_l1, 1))
+    l1_child_start = np.zeros(num_l1, dtype=np.int32)
+    l1_child_count = np.zeros(num_l1, dtype=np.int32)
+    for i in range(num_l1):
+        lo, hi = i * f, min((i + 1) * f, num_leaves)
+        l1_child_start[i] = lo
+        l1_child_count[i] = hi - lo
+        l1_mbrs[i] = mbr_of(leaf_mbrs[lo:hi])
+    return SerializedRTree(
+        root_mbr=mbr_of(l1_mbrs), l1_mbrs=l1_mbrs,
+        l1_child_start=l1_child_start, l1_child_count=l1_child_count,
+        leaf_mbrs=leaf_mbrs, leaf_counts=leaf_counts, leaf_rects=leaf_rects)
+
+
+def _median_time(fn, repeats=3):
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _pipeline_ab(tree, rects, queries, mesh, batch_size, label, repeats=3):
+    legacy = _LegacyBroadcastEngine(tree, mesh, batch_size=batch_size)
+    current = beng.BroadcastEngine(tree, mesh, batch_size=batch_size)
+    # warmup / compile, and correctness gate for the A/B itself
+    want = legacy.query(queries)
+    got = current.query(queries)
+    np.testing.assert_array_equal(got, want)
+    nq = len(queries)
+    t_legacy = _median_time(lambda: legacy.query(queries), repeats)
+    t_new = _median_time(lambda: current.query(queries), repeats)
+    row = dict(
+        bench=label, batch_size=batch_size, num_queries=nq,
+        num_rects=int(rects.shape[0]),
+        legacy_s=t_legacy, new_s=t_new,
+        legacy_qps=nq / t_legacy, new_qps=nq / t_new,
+        speedup=t_legacy / t_new,
+    )
+    common.emit(f"regress/{label}/legacy", t_legacy,
+                f"qps={row['legacy_qps']:.0f}")
+    common.emit(f"regress/{label}/new", t_new,
+                f"qps={row['new_qps']:.0f} speedup={row['speedup']:.2f}x")
+    return row, current
+
+
+def run(full: bool = False) -> list[dict]:
+    n = 100_000 if full else 20_000
+    nq = 8192
+    rects = spider.uniform(n, seed=5)
+    queries = datasets.make_queries(rects, 1.0, seed=6)
+    queries = np.concatenate([queries] * math.ceil(nq / len(queries)))[:nq]
+    mesh = common.mesh1()
+    tree = rtree.build_str_3level(rects, *rtree.choose_parameters(n, 1))
+
+    report: dict = {"workload": dict(num_rects=n, num_queries=nq,
+                                     distribution="uniform", seed=5)}
+
+    # --- pipeline A/B: sustained serving batches (headline) + bulk batch ---
+    serving, eng = _pipeline_ab(tree, rects, queries, mesh,
+                                batch_size=256, label="pipeline_serving")
+    bulk, _ = _pipeline_ab(tree, rects, queries, mesh,
+                           batch_size=4096, label="pipeline_bulk")
+    report["pipeline"] = [serving, bulk]
+
+    # --- host-side build: vectorized vs per-leaf Python loops --------------
+    b, f = rtree.choose_parameters(n, 256)
+    t_build_legacy = _median_time(
+        lambda: _legacy_build_str_3level(rects, b, f), repeats=2)
+    t_build_new = _median_time(
+        lambda: rtree.build_str_3level(rects, b, f), repeats=2)
+    report["build"] = dict(
+        num_rects=n, leaf_capacity=b, fanout=f,
+        legacy_s=t_build_legacy, new_s=t_build_new,
+        speedup=t_build_legacy / t_build_new)
+    common.emit("regress/build/legacy", t_build_legacy, "")
+    common.emit("regress/build/new", t_build_new,
+                f"speedup={t_build_legacy / t_build_new:.2f}x")
+
+    # --- fig9-style tile sweep (modeled intensity, scaled) -----------------
+    tile_rows = []
+    for tq, tr in TILES:
+        tile_bytes = (tq + tr) * 16
+        tile_ops = tq * tr * 8
+        tile_rows.append(dict(tq=tq, tr=tr,
+                              intensity_ops_per_byte=tile_ops / tile_bytes,
+                              vmem_kb=(tile_bytes + tq * tr // 8) / 1024))
+    report["tile_sweep"] = tile_rows
+
+    # --- fig10-style batch breakdown on the synthetic workload ------------
+    bs = 4096
+    batch = np.asarray(queries[:bs], np.int32)
+    # non-donating step + one staged batch: pure kernel time, no H2D staging
+    step = beng.make_query_step(mesh, donate_queries=False)
+    dev_batch = jax.device_put(batch, eng._rep_sh)
+    t_kernel = common.time_fn(
+        lambda: step(eng.leaf_coords, eng.rect_tile_mbrs, eng.cover_mbrs,
+                     dev_batch))
+    q_bytes, r_bytes = batch.nbytes, batch.shape[0] * 4
+    report["batch_breakdown"] = dict(
+        batch_size=bs, kernel_s=t_kernel,
+        query_transfer_upmem_s=q_bytes / HOST_BW,
+        result_retrieval_upmem_s=r_bytes / HOST_BW,
+        query_transfer_tpu_s=q_bytes / ICI_BW,
+        result_retrieval_tpu_s=r_bytes / ICI_BW,
+        transfer_model=eng.transfer_stats(nq))
+    common.emit("regress/batch_breakdown/kernel", t_kernel,
+                f"batch={bs}")
+
+    with open(OUT_PATH, "w") as fh:
+        json.dump(report, fh, indent=2, default=float)
+    common.emit("regress/report", 0.0, f"wrote {os.path.abspath(OUT_PATH)}")
+    return [report]
+
+
+if __name__ == "__main__":
+    run()

@@ -21,7 +21,8 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (fig8_strong_scaling, fig9_tile_sweep,
-                            fig10_batch_breakdown, table2_cpu_vs_pim,
+                            fig10_batch_breakdown, regress,
+                            table2_cpu_vs_pim,
                             table3_broadcast_vs_subtree,
                             table4_memory_profile, table5_energy)
     benches = {
@@ -32,6 +33,7 @@ def main() -> int:
         "fig8": fig8_strong_scaling.run,
         "fig9": fig9_tile_sweep.run,
         "fig10": fig10_batch_breakdown.run,
+        "regress": regress.run,
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -10,6 +10,8 @@ import numpy as np
 
 import jax
 
+from repro import compat
+
 from repro.core import engine, rtree
 from repro.data import datasets, spider
 from repro.kernels import ref
@@ -20,8 +22,7 @@ queries = datasets.make_queries(rects, 0.05)
 print(f"{len(rects)} rects, {len(queries)} queries")
 
 # 2. host-side STR bulk load, exactly three levels (paper Sec III-C.1)
-mesh = jax.make_mesh((1, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((1, 1), ("data", "model"))
 leaf_cap, fanout = rtree.choose_parameters(len(rects), mesh.size)
 tree = rtree.build_str_3level(rects, leaf_cap, fanout)
 print(f"R-tree: {tree.num_leaves} leaves (B={leaf_cap}), "

@@ -11,12 +11,13 @@ import numpy as np
 
 import jax
 
+from repro import compat
+
 from repro.core import cpu_baseline, engine, rtree, subtree
 from repro.data import datasets
 from repro.kernels import ref
 
-mesh = jax.make_mesh((1, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((1, 1), ("data", "model"))
 
 for name, n in (("sports", 50_000), ("lakes", 120_000)):
     rects = datasets.load(name, n=n)

@@ -9,6 +9,8 @@ import dataclasses
 
 import jax
 
+from repro import compat
+
 from repro.configs import llama3_2_1b
 from repro.train import train_loop
 
@@ -24,8 +26,7 @@ cfg = dataclasses.replace(
     llama3_2_1b.CONFIG, n_layers=4, d_model=512, n_heads=8, n_kv_heads=4,
     head_dim=64, d_ff=2048, vocab=32_000, arch_id="llama3-100m")
 
-mesh = jax.make_mesh((1, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((1, 1), ("data", "model"))
 res = train_loop.train(
     cfg, mesh, steps=args.steps, batch_size=8, seq_len=256,
     ckpt_dir=args.ckpt_dir, ckpt_every=100, lr=3e-4)

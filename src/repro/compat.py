@@ -1,0 +1,98 @@
+"""Version-portability shims for the jax APIs this repo targets.
+
+The codebase is written against the current jax surface (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, differentiable
+``jax.lax.optimization_barrier``).  Container images often pin an older jax
+where those names either don't exist or lack rules; everything here degrades
+gracefully so the same source runs on both.
+
+All mesh/shard_map construction in the repo goes through this module — do not
+call ``jax.shard_map`` / ``jax.make_mesh`` directly.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Sequence
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+if not _HAS_NEW_SHARD_MAP:  # old home of shard_map
+    from jax.experimental import shard_map as _esm
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    if _HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axes)))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def shard_map(
+    f: Callable,
+    mesh: jax.sharding.Mesh,
+    in_specs,
+    out_specs,
+    *,
+    axis_names: Iterable[str] | None = None,
+    check_vma: bool = False,
+):
+    """Portable shard_map.
+
+    ``axis_names`` is the set of *manual* axes (new-API semantics); ``None``
+    means all mesh axes are manual.  ``check_vma`` maps to the old API's
+    ``check_rep``.
+    """
+    if _HAS_NEW_SHARD_MAP:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kw)
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _esm.shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma, auto=auto)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` fallback for jax versions without it."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def _barrier_is_differentiable() -> bool:
+    import jax.numpy as jnp
+
+    try:
+        jax.grad(lambda x: jax.lax.optimization_barrier(x).sum())(
+            jnp.ones((2,)))
+        return True
+    except NotImplementedError:
+        return False
+
+
+if _barrier_is_differentiable():
+    opt_barrier = jax.lax.optimization_barrier
+else:
+    # Older jax has no differentiation rule for optimization_barrier; the
+    # barrier is an XLA scheduling hint with identity semantics, so a
+    # straight-through gradient is exact.
+    @jax.custom_vjp
+    def opt_barrier(x):
+        return jax.lax.optimization_barrier(x)
+
+    def _opt_barrier_fwd(x):
+        return opt_barrier(x), None
+
+    def _opt_barrier_bwd(_, g):
+        return (g,)
+
+    opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)

@@ -8,14 +8,23 @@ paper (UPMEM)               this engine (TPU mesh)
 host builds STR tree        :func:`repro.core.rtree.build_str_3level` (numpy)
 BFS serialization           structure-of-arrays, leaf level contiguous
 broadcast upper headers     replicated operand — ``PartitionSpec()``
-scatter leaf slices         leaf arrays sharded over *all* mesh axes, axis 0;
-                            contiguous BFS slices == the paper's partitions
+scatter leaf slices         leaf arrays sharded over *all* mesh axes, axis 1
+                            of the (4, N) coordinate layout; contiguous BFS
+                            slices == the paper's partitions
 broadcast query batch       replicated operand, fixed batch size (≤10k)
-DPU two-phase kernel        shard_map body: Phase-1 mask from the covering
-                            level-1 MBRs, Phase-2 Pallas tile-scan kernel
+DPU two-phase kernel        shard_map body: fused Phase-1 cover filter +
+                            Phase-2 Pallas tile-scan kernel (DESIGN.md Sec 4)
 host aggregates counts      ``jax.lax.psum`` over the mesh (on-fabric; a
-                            beyond-paper improvement — flagged in DESIGN.md)
+                            beyond-paper improvement — DESIGN.md Sec 7)
 ==========================  =================================================
+
+Placement-time metadata cache (DESIGN.md Sec 3): everything the steady-state
+batch loop needs besides the queries themselves — transposed leaf
+coordinates, per-device leaf-tile MBRs, covering level-1 MBRs, and the
+sparse-path tile occupancy table — is computed once in :func:`shard_tree` and
+device-placed in ``BroadcastEngine.__init__``.  The jitted query step
+performs zero per-batch host-side metadata construction; per-batch query-tile
+MBRs are derived on device inside the step.
 
 Per-device Phase-1 neighborhoods: device ``d`` holds the contiguous leaf
 slice ``[d·Lp, (d+1)·Lp)``; its covering level-1 nodes are those whose child
@@ -25,17 +34,17 @@ determined by the DPU index", giving O(1) upper-level filtering per query.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Sequence
+import warnings
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import EMPTY_RECT, SerializedRTree
+from repro import compat
+from repro.core.types import EMPTY_RECT, SerializedRTree, mbr_of
 from repro.kernels import ops
-from repro.kernels import ref as kref
 
 DEFAULT_BATCH = 10_000  # paper: "queries are processed in batches of up to 10,000"
 
@@ -46,7 +55,14 @@ def _mesh_device_count(mesh: jax.sharding.Mesh) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class ShardedLayout:
-    """Host-computed device layout: leaf slices and covering L1 headers."""
+    """Host-computed device layout plus the placement-time metadata cache.
+
+    ``leaf_rects_flat`` keeps the (N, 4) row layout for inspection and the
+    communication model; the engine device-places its transpose.  With
+    ``tile`` set, each device's slice is EMPTY-padded to a tile multiple and
+    the per-tile MBRs / occupancy are precomputed here, once, instead of
+    inside every jitted batch step.
+    """
 
     leaf_rects_flat: np.ndarray   # (D * R_loc, 4) int32, EMPTY-padded
     cover_mbrs: np.ndarray        # (D, Kmax, 4) int32, EMPTY-padded
@@ -54,6 +70,9 @@ class ShardedLayout:
     rects_per_device: int
     kmax: int
     leaves_per_device: int
+    tile: int | None = None
+    rect_tile_mbrs: np.ndarray | None = None   # (D, NT, 4) int32
+    tile_occupancy: np.ndarray | None = None   # (D, NT) int32 valid rects
 
     @property
     def leaf_bytes(self) -> int:
@@ -63,10 +82,28 @@ class ShardedLayout:
     def header_bytes(self) -> int:
         return self.cover_mbrs.nbytes // self.num_devices  # broadcast once
 
+    @property
+    def metadata_bytes(self) -> int:
+        """One-time scatter volume of the cached tile metadata.
 
-def shard_tree(tree: SerializedRTree, num_devices: int) -> ShardedLayout:
+        Counts only what is actually device-placed (the tile MBRs);
+        ``tile_occupancy`` stays host-side as layout introspection and
+        prefetch-table statistics, so it is not charged here."""
+        if self.rect_tile_mbrs is None:
+            return 0
+        return self.rect_tile_mbrs.nbytes
+
+
+def shard_tree(
+    tree: SerializedRTree, num_devices: int, *, tile: int | None = None
+) -> ShardedLayout:
     """Partition the BFS leaf level into contiguous per-device slices and
-    compute each device's covering level-1 MBR neighborhood."""
+    compute each device's covering level-1 MBR neighborhood.
+
+    With ``tile`` (the kernel's rect-tile size TR), the per-device slices are
+    padded to a tile multiple and the leaf-tile MBR / occupancy tables are
+    precomputed — the placement-time half of the device-resident pipeline.
+    """
     d = int(num_devices)
     leaf_rects = np.asarray(tree.leaf_rects)           # (L, B, 4)
     l, b, _ = leaf_rects.shape
@@ -76,29 +113,43 @@ def shard_tree(tree: SerializedRTree, num_devices: int) -> ShardedLayout:
         leaf_rects = np.concatenate(
             [leaf_rects, np.tile(EMPTY_RECT, (pad, b, 1))], axis=0
         )
-    flat = leaf_rects.reshape(d * lp * b, 4)
+    per_dev = leaf_rects.reshape(d, lp * b, 4)
+    rect_tile_mbrs = tile_occupancy = None
+    if tile is not None:
+        rp = math.ceil(lp * b / tile) * tile
+        if rp != lp * b:
+            per_dev = np.concatenate(
+                [per_dev, np.tile(EMPTY_RECT, (d, rp - lp * b, 1))], axis=1
+            )
+        tiles = per_dev.reshape(d, rp // tile, tile, 4)
+        rect_tile_mbrs = mbr_of(tiles)
+        valid = tiles[..., 0] <= tiles[..., 2]
+        tile_occupancy = valid.sum(axis=2).astype(np.int32)
+    flat = per_dev.reshape(-1, 4)
 
     starts = np.asarray(tree.l1_child_start, dtype=np.int64)
     counts = np.asarray(tree.l1_child_count, dtype=np.int64)
     ends = starts + counts
     l1_mbrs = np.asarray(tree.l1_mbrs)
-    covers = []
-    for dev in range(d):
-        s, e = dev * lp, min((dev + 1) * lp, l)
-        # level-1 nodes whose child leaf range intersects [s, e)
-        hit = (starts < e) & (ends > s)
-        covers.append(l1_mbrs[hit])
-    kmax = max(1, max(c.shape[0] for c in covers))
+    # level-1 nodes whose child leaf range intersects each device slice
+    dev_lo = np.arange(d, dtype=np.int64)[:, None] * lp
+    dev_hi = np.minimum(dev_lo + lp, l)
+    hits = (starts[None, :] < dev_hi) & (ends[None, :] > dev_lo)   # (D, C1)
+    kmax = max(1, int(hits.sum(axis=1).max()))
     cover_mbrs = np.tile(EMPTY_RECT, (d, kmax, 1))
-    for dev, c in enumerate(covers):
+    for dev in range(d):
+        c = l1_mbrs[hits[dev]]
         cover_mbrs[dev, : c.shape[0]] = c
     return ShardedLayout(
         leaf_rects_flat=flat.astype(np.int32),
         cover_mbrs=cover_mbrs.astype(np.int32),
         num_devices=d,
-        rects_per_device=lp * b,
+        rects_per_device=flat.shape[0] // d,
         kmax=kmax,
         leaves_per_device=lp,
+        tile=tile,
+        rect_tile_mbrs=rect_tile_mbrs,
+        tile_occupancy=tile_occupancy,
     )
 
 
@@ -108,40 +159,47 @@ def make_query_step(
     impl: str = ops.DEFAULT_IMPL,
     tq: int = 512,
     tr: int = 1024,
+    donate_queries: bool = True,
+    on_trace: Callable[[], None] | None = None,
 ):
     """Build the jitted SPMD query step for ``mesh``.
 
-    Returns ``step(leaf_rects_flat, cover_mbrs, queries) -> counts`` where
-    the leaf array is sharded over all mesh axes, headers are sharded
-    one-row-per-device, and queries/counts are replicated.  This function is
-    what the multi-pod dry-run lowers and compiles.
+    Returns ``step(leaf_coords, rect_tile_mbrs, cover_mbrs, queries) ->
+    counts`` where the (4, N) leaf coordinates are sharded over all mesh axes
+    on axis 1, tile metadata and headers are sharded one-row-per-device, and
+    queries/counts are replicated.  All rect-side metadata is placement-time
+    input — the step derives only query-tile MBRs per batch, on device.  This
+    function is what the multi-pod dry-run lowers and compiles.
+
+    ``on_trace`` fires once per (re)trace — the steady-state zero-host-work
+    property is asserted against it in the tests.
     """
     axes = tuple(mesh.axis_names)
-    p_leaf = jax.sharding.PartitionSpec(axes)
-    p_cover = jax.sharding.PartitionSpec(axes)
+    p_coords = jax.sharding.PartitionSpec(None, axes)
+    p_meta = jax.sharding.PartitionSpec(axes)
     p_rep = jax.sharding.PartitionSpec()
 
-    def shard_fn(local_rects, local_cover, queries):
+    def shard_fn(local_coords, local_rmbrs, local_cover, queries):
+        if on_trace is not None:
+            on_trace()
         cover = local_cover.reshape(-1, 4)              # (Kmax, 4)
-        # Phase 1: upper-level filtering against the covering L1 MBRs
+        rmbrs = local_rmbrs.reshape(-1, 4)              # (NT, 4)
+        # Two-phase filter+scan, Phase-1 fused into the kernel
         # (WRAM-resident metadata in the paper; VMEM/registers here).
-        m = kref.rect_overlap(queries[:, None, :], cover[None, :, :])
-        mask = m.any(axis=1)
-        # Phase 2: local leaf scan with tile-MBR pruning.
-        counts = ops.overlap_counts(
-            queries, local_rects, mask, impl=impl, tq=tq, tr=tr
+        counts = ops.overlap_counts_fused(
+            queries, local_coords, rmbrs, cover, impl=impl, tq=tq, tr=tr
         )
         # Host aggregation in the paper; on-fabric psum here.
         return jax.lax.psum(counts, axes)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=(p_leaf, p_cover, p_rep),
+        in_specs=(p_coords, p_meta, p_meta, p_rep),
         out_specs=p_rep,
         check_vma=False,  # Pallas calls don't carry varying-mesh-axis info
     )
-    return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(3,) if donate_queries else ())
 
 
 def morton_order(rects: np.ndarray, shift: int = 12) -> np.ndarray:
@@ -149,21 +207,76 @@ def morton_order(rects: np.ndarray, shift: int = 12) -> np.ndarray:
     spatially coherent query batches make query-tile MBRs tight, so the
     kernel's tile-MBR pruning (and the scalar-prefetch kernel's DMA skip)
     fires; measured 6.7× fewer active (query-tile × rect-tile) pairs on the
-    lakes workload vs arrival order."""
+    lakes workload vs arrival order.
+
+    Centres are offset to start at zero, then 21 bits per axis are
+    interleaved (42-bit code) — with the default ``shift`` of 12 that spans
+    the full int33 coordinate range, so large-coordinate datasets no longer
+    collapse into one Z-code bucket (the old code interleaved only 10 bits).
+    """
+    if rects.shape[0] == 0:
+        return np.empty(0, dtype=np.int64)
     r = rects.astype(np.int64)
-    cx = (((r[:, 0] + r[:, 2]) // 2) >> shift).astype(np.uint64)
-    cy = (((r[:, 1] + r[:, 3]) // 2) >> shift).astype(np.uint64)
+    cx = (r[:, 0] + r[:, 2]) // 2
+    cy = (r[:, 1] + r[:, 3]) // 2
+    cx = ((cx - cx.min()) >> shift).astype(np.uint64)
+    cy = ((cy - cy.min()) >> shift).astype(np.uint64)
     code = np.zeros(len(rects), np.uint64)
-    for i in range(10):
+    for i in range(21):
         code |= ((cx >> np.uint64(i)) & np.uint64(1)) << np.uint64(2 * i)
         code |= ((cy >> np.uint64(i)) & np.uint64(1)) << np.uint64(2 * i + 1)
     return np.argsort(code, kind="stable")
 
 
+def stream_batches(
+    step: Callable,
+    operands: Sequence[Any],
+    queries: np.ndarray,
+    batch_size: int,
+    rep_sharding: jax.sharding.NamedSharding,
+) -> np.ndarray:
+    """Pipelined fixed-shape batch loop (DESIGN.md Sec 5).
+
+    The next batch is staged (``device_put``) while the current one computes
+    — jax dispatch is asynchronous, so the host never blocks between batches;
+    query buffers are donated by the step and host references dropped as soon
+    as each dispatch is issued.  Results are synced once at the end instead
+    of per batch.
+    """
+    queries = np.asarray(queries, dtype=np.int32)
+    q = queries.shape[0]
+    if q == 0:
+        return np.empty(0, dtype=np.int32)
+    bs = int(batch_size)
+    nb = math.ceil(q / bs)
+    pad = nb * bs - q
+    if pad:
+        queries = np.concatenate([queries, np.tile(EMPTY_RECT, (pad, 1))])
+    batches = queries.reshape(nb, bs, 4)
+
+    outs = []
+    staged = jax.device_put(batches[0], rep_sharding)
+    with warnings.catch_warnings():
+        # The step donates its query buffer (a liveness hint); the (Q,)
+        # count output can never alias the (Q, 4) input, so XLA's compile
+        # advises the donation is unusable for aliasing — expected here,
+        # and suppressed only for this loop, not process-wide.
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        for i in range(nb):
+            nxt = (jax.device_put(batches[i + 1], rep_sharding)
+                   if i + 1 < nb else None)
+            outs.append(step(*operands, staged))
+            staged = nxt              # drop our reference to the donated buffer
+    jax.block_until_ready(outs)           # single host sync for the whole set
+    return np.concatenate([np.asarray(o) for o in outs])[:q]
+
+
 class BroadcastEngine:
     """End-to-end broadcast engine: host build → device placement → batched
     queries.  Mirrors the paper's Fig. 3 workflow.  ``sort_queries`` applies
-    Morton ordering per batch (counts are un-permuted on return)."""
+    Morton ordering once over the whole query set per :meth:`query` call
+    (counts are un-permuted on return)."""
 
     def __init__(
         self,
@@ -180,16 +293,30 @@ class BroadcastEngine:
         self.batch_size = int(batch_size)
         self.sort_queries = sort_queries
         self.num_devices = _mesh_device_count(mesh)
-        self.layout = shard_tree(tree, self.num_devices)
+        self.layout = shard_tree(tree, self.num_devices, tile=tr)
+        self.trace_count = 0
 
         axes = tuple(mesh.axis_names)
-        leaf_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(axes))
+        coords_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(None, axes))
+        meta_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(axes))
         rep_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-        # one-time placement: leaf scatter + header broadcast (paper Sec III-C.3)
-        self.leaf_rects = jax.device_put(self.layout.leaf_rects_flat, leaf_sh)
-        self.cover_mbrs = jax.device_put(self.layout.cover_mbrs, leaf_sh)
+        # one-time placement (paper Sec III-C.3): leaf scatter + header
+        # broadcast + the tile-metadata cache — nothing below is touched
+        # again until the tree changes.
+        self.leaf_coords = jax.device_put(
+            np.ascontiguousarray(self.layout.leaf_rects_flat.T), coords_sh)
+        self.rect_tile_mbrs = jax.device_put(
+            self.layout.rect_tile_mbrs, meta_sh)
+        self.cover_mbrs = jax.device_put(self.layout.cover_mbrs, meta_sh)
         self._rep_sh = rep_sh
-        self._step = make_query_step(mesh, impl=impl, tq=tq, tr=tr)
+
+        def _count_trace():
+            self.trace_count += 1
+
+        self._step = make_query_step(
+            mesh, impl=impl, tq=tq, tr=tr, on_trace=_count_trace)
 
     def query(self, queries: np.ndarray) -> np.ndarray:
         """Batched range-query counts (paper Sec III-C.4/5)."""
@@ -201,31 +328,23 @@ class BroadcastEngine:
         return self._query_inner(queries)
 
     def _query_inner(self, queries: np.ndarray) -> np.ndarray:
-        q = queries.shape[0]
-        bs = self.batch_size
-        out = np.empty(q, dtype=np.int32)
-        for lo in range(0, q, bs):
-            hi = min(lo + bs, q)
-            batch = queries[lo:hi]
-            if hi - lo < bs:  # pad the tail batch to keep one compiled shape
-                batch = np.concatenate(
-                    [batch, np.tile(EMPTY_RECT, (bs - (hi - lo), 1))]
-                )
-            dev_batch = jax.device_put(batch, self._rep_sh)
-            counts = self._step(self.leaf_rects, self.cover_mbrs, dev_batch)
-            out[lo:hi] = np.asarray(counts)[: hi - lo]
-        return out
+        return stream_batches(
+            self._step,
+            (self.leaf_coords, self.rect_tile_mbrs, self.cover_mbrs),
+            queries, self.batch_size, self._rep_sh,
+        )
 
     # ---- communication-volume model (paper Figs. 7/10, Table III) --------
     def transfer_stats(self, num_queries: int) -> dict[str, int]:
         """Bytes moved host→device / device→host under the paper's model.
 
-        broadcast: headers once; leaves scatter once; queries broadcast per
-        batch; results one count per query (fabric-reduced)."""
+        broadcast: headers + tile metadata once; leaves scatter once; queries
+        broadcast per batch; results one count per query (fabric-reduced)."""
         nb = math.ceil(num_queries / self.batch_size)
         return {
             "header_broadcast_bytes": self.layout.header_bytes,
             "leaf_scatter_bytes": self.layout.leaf_bytes,
+            "metadata_scatter_bytes": self.layout.metadata_bytes,
             "query_broadcast_bytes": nb * self.batch_size * 16,
             "result_bytes": num_queries * 4,
             "per_batch_bytes": self.batch_size * 16,

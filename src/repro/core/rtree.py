@@ -109,21 +109,22 @@ def build_str_3level(
         raise ValueError("leaf_capacity and fanout must be positive")
 
     # --- leaf level ---------------------------------------------------------
+    # STR packing fills leaves front-to-back, so only the last leaf can be
+    # partial: pad the packed rows with EMPTY sentinels and reshape — no
+    # Python loop over the (possibly millions of) leaves.  Sentinels carry
+    # INT32_MAX minima / INT32_MIN maxima, so the min/max reductions below
+    # give exact MBRs without masking.
     order = str_pack(rects, b)
     packed = rects[order]
     num_leaves = math.ceil(n / b)
-    leaf_rects = np.tile(EMPTY_RECT, (num_leaves, b, 1))
-    leaf_counts = np.zeros(num_leaves, dtype=np.int32)
-    for j in range(num_leaves):
-        lo, hi = j * b, min((j + 1) * b, n)
-        leaf_rects[j, : hi - lo] = packed[lo:hi]
-        leaf_counts[j] = hi - lo
-    valid = leaf_counts > 0
-    leaf_mbrs = np.tile(EMPTY_RECT, (num_leaves, 1))
-    for j in range(num_leaves):
-        if leaf_counts[j]:
-            leaf_mbrs[j] = mbr_of(leaf_rects[j, : leaf_counts[j]])
-    assert valid.all(), "STR packing must not create empty leaves"
+    pad = num_leaves * b - n
+    if pad:
+        packed = np.concatenate([packed, np.tile(EMPTY_RECT, (pad, 1))])
+    leaf_rects = packed.reshape(num_leaves, b, 4)
+    leaf_counts = np.full(num_leaves, b, dtype=np.int32)
+    leaf_counts[-1] = b - pad
+    assert (leaf_counts > 0).all(), "STR packing must not create empty leaves"
+    leaf_mbrs = mbr_of(leaf_rects)
 
     # --- level 1: STR over leaf MBRs ---------------------------------------
     l1_order = str_pack(leaf_mbrs, f)
@@ -134,14 +135,14 @@ def build_str_3level(
     leaf_mbrs = leaf_mbrs[l1_order]
 
     num_l1 = math.ceil(num_leaves / f)
-    l1_mbrs = np.tile(EMPTY_RECT, (num_l1, 1))
-    l1_child_start = np.zeros(num_l1, dtype=np.int32)
-    l1_child_count = np.zeros(num_l1, dtype=np.int32)
-    for i in range(num_l1):
-        lo, hi = i * f, min((i + 1) * f, num_leaves)
-        l1_child_start[i] = lo
-        l1_child_count[i] = hi - lo
-        l1_mbrs[i] = mbr_of(leaf_mbrs[lo:hi])
+    l1_child_start = (np.arange(num_l1, dtype=np.int64) * f).astype(np.int32)
+    l1_child_count = np.minimum(f, num_leaves - l1_child_start).astype(
+        np.int32)
+    pad_l1 = num_l1 * f - num_leaves
+    lm = leaf_mbrs
+    if pad_l1:
+        lm = np.concatenate([lm, np.tile(EMPTY_RECT, (pad_l1, 1))])
+    l1_mbrs = mbr_of(lm.reshape(num_l1, f, 4))
 
     root_mbr = mbr_of(l1_mbrs)
     return SerializedRTree(

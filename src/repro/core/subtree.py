@@ -9,8 +9,11 @@ On TPU the per-device subtree is serialized as the flat array of its
 rectangles (padded to the max across devices — SPMD needs uniform shapes,
 and the padding itself is part of the baseline's communication cost, just as
 per-DPU serialized subtrees of varying size are in the paper).  Traversal
-pruning inside a device uses the subtree root MBR (Phase-1 equivalent) and
-the kernel's tile-MBR pruning (internal-node equivalent).
+pruning inside a device uses the subtree root MBR as a single-entry Phase-1
+cover (fused into the kernel, DESIGN.md Sec 4) and the kernel's cached
+tile-MBR pruning (internal-node equivalent) — the baseline shares the
+device-resident pipeline of :mod:`repro.core.engine` so the comparison
+isolates the *partitioning strategy*, not the batch plumbing.
 
 The paper's headline finding — the subtree design is *communication
 dominated* because each DPU needs a distinct transfer whose aggregate volume
@@ -22,15 +25,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import rtree
-from repro.core.types import EMPTY_RECT, TopDownNode
+from repro.core.engine import stream_batches
+from repro.core.types import EMPTY_RECT, TopDownNode, mbr_of
 from repro.kernels import ops
-from repro.kernels import ref as kref
 
 
 def _collect_rects(node: TopDownNode) -> np.ndarray:
@@ -41,10 +46,12 @@ def _collect_rects(node: TopDownNode) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class SubtreeLayout:
-    rects: np.ndarray          # (D, Rmax, 4) int32 EMPTY-padded
+    rects: np.ndarray          # (D, Rp, 4) int32 EMPTY-padded
     root_mbrs: np.ndarray      # (D, 4) int32 — per-subtree root MBR
     subtree_bytes: np.ndarray  # (D,) int64 — true serialized size per device
     num_devices: int
+    tile: int | None = None
+    rect_tile_mbrs: np.ndarray | None = None   # (D, NT, 4) int32
 
     @property
     def scatter_bytes(self) -> int:
@@ -54,13 +61,16 @@ class SubtreeLayout:
 
 
 def build_layout(
-    rects: np.ndarray, num_devices: int, leaf_capacity: int
+    rects: np.ndarray, num_devices: int, leaf_capacity: int,
+    *, tile: int | None = None,
 ) -> SubtreeLayout:
     root = rtree.build_fanout_constrained(rects, num_devices, leaf_capacity)
     subs = rtree.subtree_partitions(root, num_devices)
     per_dev = [_collect_rects(s) for s in subs]
     sizes = [r.shape[0] for r in per_dev]
     rmax = max(sizes)
+    if tile is not None:
+        rmax = math.ceil(rmax / tile) * tile
     d = num_devices
     out = np.tile(EMPTY_RECT, (d, rmax, 1))
     mbrs = np.tile(EMPTY_RECT, (d, 1))
@@ -69,11 +79,16 @@ def build_layout(
         out[i, : r.shape[0]] = r
         mbrs[i] = subs[i].mbr
         sbytes[i] = subs[i].serialized_bytes()
+    rect_tile_mbrs = None
+    if tile is not None:
+        rect_tile_mbrs = mbr_of(out.reshape(d, rmax // tile, tile, 4))
     return SubtreeLayout(
         rects=out.astype(np.int32),
         root_mbrs=mbrs.astype(np.int32),
         subtree_bytes=sbytes,
         num_devices=d,
+        tile=tile,
+        rect_tile_mbrs=rect_tile_mbrs,
     )
 
 
@@ -83,29 +98,35 @@ def make_query_step(
     impl: str = ops.DEFAULT_IMPL,
     tq: int = 512,
     tr: int = 1024,
+    donate_queries: bool = True,
+    on_trace: Callable[[], None] | None = None,
 ):
     axes = tuple(mesh.axis_names)
+    p_coords = jax.sharding.PartitionSpec(None, axes)
     p_shard = jax.sharding.PartitionSpec(axes)
     p_rep = jax.sharding.PartitionSpec()
 
-    def shard_fn(local_rects, local_root_mbr, queries):
-        rects_2d = local_rects.reshape(-1, 4)
-        mbr = local_root_mbr.reshape(4)
-        # subtree root MBR pruning (recursion step 0 in the paper's DPU code)
-        mask = kref.rect_overlap(queries, mbr[None, :])
-        counts = ops.overlap_counts(
-            queries, rects_2d, mask, impl=impl, tq=tq, tr=tr
+    def shard_fn(local_coords, local_rmbrs, local_root_mbr, queries):
+        if on_trace is not None:
+            on_trace()
+        # subtree root MBR = a one-entry Phase-1 cover set (recursion step 0
+        # in the paper's DPU code), fused into the kernel like the broadcast
+        # engine's L1 covers
+        cover = local_root_mbr.reshape(-1, 4)           # (1, 4)
+        rmbrs = local_rmbrs.reshape(-1, 4)
+        counts = ops.overlap_counts_fused(
+            queries, local_coords, rmbrs, cover, impl=impl, tq=tq, tr=tr
         )
         return jax.lax.psum(counts, axes)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=(p_shard, p_shard, p_rep),
+        in_specs=(p_coords, p_shard, p_shard, p_rep),
         out_specs=p_rep,
         check_vma=False,  # Pallas calls don't carry varying-mesh-axis info
     )
-    return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(3,) if donate_queries else ())
 
 
 class SubtreeEngine:
@@ -126,31 +147,35 @@ class SubtreeEngine:
         self.batch_size = int(batch_size)
         d = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
         self.num_devices = d
-        self.layout = build_layout(rects, d, leaf_capacity)
+        self.layout = build_layout(rects, d, leaf_capacity, tile=tr)
+        self.trace_count = 0
 
         axes = tuple(mesh.axis_names)
-        shard_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(axes))
-        self._rep_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-        self.dev_rects = jax.device_put(self.layout.rects, shard_sh)
+        coords_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(None, axes))
+        shard_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(axes))
+        self._rep_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        self.dev_coords = jax.device_put(
+            np.ascontiguousarray(self.layout.rects.reshape(-1, 4).T),
+            coords_sh)
+        self.dev_tile_mbrs = jax.device_put(
+            self.layout.rect_tile_mbrs, shard_sh)
         self.dev_mbrs = jax.device_put(self.layout.root_mbrs, shard_sh)
-        self._step = make_query_step(mesh, impl=impl, tq=tq, tr=tr)
+
+        def _count_trace():
+            self.trace_count += 1
+
+        self._step = make_query_step(
+            mesh, impl=impl, tq=tq, tr=tr, on_trace=_count_trace)
 
     def query(self, queries: np.ndarray) -> np.ndarray:
-        queries = np.asarray(queries, dtype=np.int32)
-        q = queries.shape[0]
-        bs = self.batch_size
-        out = np.empty(q, dtype=np.int32)
-        for lo in range(0, q, bs):
-            hi = min(lo + bs, q)
-            batch = queries[lo:hi]
-            if hi - lo < bs:
-                batch = np.concatenate(
-                    [batch, np.tile(EMPTY_RECT, (bs - (hi - lo), 1))]
-                )
-            dev_batch = jax.device_put(batch, self._rep_sh)
-            counts = self._step(self.dev_rects, self.dev_mbrs, dev_batch)
-            out[lo:hi] = np.asarray(counts)[: hi - lo]
-        return out
+        return stream_batches(
+            self._step,
+            (self.dev_coords, self.dev_tile_mbrs, self.dev_mbrs),
+            queries, self.batch_size, self._rep_sh,
+        )
 
     def transfer_stats(self, num_queries: int) -> dict[str, int]:
         """The paper observed "repeated subtree transfers and per-DPU data

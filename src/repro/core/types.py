@@ -33,8 +33,15 @@ def rect_overlap_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
 
 
 def mbr_of(rects: np.ndarray) -> np.ndarray:
-    """Minimum bounding rectangle of a (..., 4) rect array (ignores sentinels only
-    if none present; callers pass valid rects)."""
+    """Minimum bounding rectangle(s) over the second-to-last axis of a
+    (..., N, 4) rect array.
+
+    EMPTY sentinels are identity elements of the reduction (INT32_MAX minima
+    / INT32_MIN maxima), so sentinel-padded groups yield exact MBRs as long
+    as each group has at least one valid rect; an all-sentinel group yields
+    the EMPTY MBR.  This is the one MBR reduction every builder (STR levels,
+    shard_tree tile cache, subtree tile cache) shares with the kernels'
+    device twin (``ops.tile_mbrs``)."""
     return np.concatenate(
         [rects[..., :2].min(axis=-2), rects[..., 2:].max(axis=-2)], axis=-1
     ).astype(np.int32)

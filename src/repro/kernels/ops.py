@@ -1,13 +1,25 @@
 """Jitted public wrappers around the rectangle-intersection kernels.
 
-``overlap_counts(queries, rects, mask)`` is the engine-facing op.  Three
-execution paths, selected by ``impl=``:
+``overlap_counts(queries, rects, mask)`` is the generic op.  Three execution
+paths, selected by ``impl=``:
 
 * ``"pallas"``  — the Pallas TPU kernel (interpret=True on CPU containers).
-* ``"sparse"``  — the scalar-prefetch Pallas kernel with host-built active
-                  tile lists (DMA-level pruning; §Perf hillclimb kernel).
+* ``"sparse"``  — the scalar-prefetch Pallas kernel; active tile lists are
+                  built *on device* with a single argsort/cumsum construction
+                  (DMA-level pruning; §Perf hillclimb kernel).
 * ``"xla"``     — pure-jnp tiled equivalent (same math, XLA codegen).  This
                   is the fast path on CPU and the cross-check on TPU.
+
+Any other ``impl`` raises ``ValueError`` — historically ``"sparse"`` fell
+through to the dense Pallas path silently.
+
+``overlap_counts_fused(queries, r_coords, r_tile_mbrs, cover_mbrs)`` is the
+engine-facing op for the device-resident pipeline (DESIGN.md Sec 3/4): the
+rect-side metadata (transposed coordinates + per-tile MBRs) is computed once
+at placement time and lives on device; only query-side metadata (tile MBRs of
+the current batch) is derived per batch, on device, inside the jitted step.
+The Phase-1 cover filter is fused into the kernels instead of materializing a
+(Q, Kmax) boolean mask per batch.
 
 All paths are exact-int equal to :mod:`repro.kernels.ref`.
 """
@@ -25,6 +37,8 @@ from repro.kernels import ref
 
 INT32_MAX = 2**31 - 1
 INT32_MIN = -(2**31)
+
+IMPLS = ("pallas", "sparse", "xla")
 
 # On CPU containers the Pallas kernel runs in interpret mode (the kernel body
 # executes in Python) — correct but slow, so engines default to the XLA path
@@ -77,6 +91,8 @@ def overlap_counts(
     impl: str = DEFAULT_IMPL,
 ) -> jnp.ndarray:
     """Per-query overlap counts with optional Phase-1 gating.  (Q,) int32."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
     q = queries.shape[0]
     if mask is None:
         mask = jnp.ones((q,), jnp.int32)
@@ -92,11 +108,73 @@ def overlap_counts(
     r_coords = rp.T                       # (4, Rp)
     qmbrs = tile_mbrs(qp, tq)
     rmbrs = tile_mbrs(rp, tr)
-    out = rk.overlap_counts_tiled(
-        q_coords, r_coords, qmbrs, rmbrs, maskp,
-        tq=tq, tr=tr, interpret=_INTERPRET,
-    )
+    if impl == "sparse":
+        nactive, tile_ids = build_active_tiles_device(qmbrs, rmbrs)
+        out = rk.overlap_counts_sparse(
+            q_coords, r_coords, maskp, nactive, tile_ids,
+            tq=tq, tr=tr, interpret=_INTERPRET,
+        )
+    else:
+        out = rk.overlap_counts_tiled(
+            q_coords, r_coords, qmbrs, rmbrs, maskp,
+            tq=tq, tr=tr, interpret=_INTERPRET,
+        )
     return out[:q]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tq", "tr", "impl")
+)
+def overlap_counts_fused(
+    queries: jnp.ndarray,       # (Q, 4) int32 query batch
+    r_coords: jnp.ndarray,      # (4, Rp) int32 — placement-time transpose
+    r_tile_mbrs: jnp.ndarray,   # (Rp // tr, 4) int32 — placement-time MBRs
+    cover_mbrs: jnp.ndarray,    # (K, 4) int32 covering L1 MBRs, EMPTY-padded
+    *,
+    tq: int = rk.DEFAULT_TQ,
+    tr: int = rk.DEFAULT_TR,
+    impl: str = DEFAULT_IMPL,
+) -> jnp.ndarray:
+    """Device-resident two-phase counts.  (Q,) int32.
+
+    The rect side arrives pre-tiled (coords transposed, tile MBRs cached at
+    placement); only the query side is tiled here, on device.  Phase-1 runs
+    fused inside the kernel against ``cover_mbrs``.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    q = queries.shape[0]
+    if impl == "xla":
+        mask = ref.rect_overlap(
+            queries[:, None, :], cover_mbrs[None, :, :]).any(axis=1)
+        return ref.masked_overlap_counts_ref(queries, mask, r_coords.T)
+
+    qp = pad_rects_to(queries, tq)
+    q_coords = qp.T
+    qmbrs = tile_mbrs(qp, tq)
+    if impl == "sparse":
+        nactive, tile_ids = build_active_tiles_device(
+            qmbrs, r_tile_mbrs, cover_mbrs)
+        out = rk.overlap_counts_sparse_fused(
+            q_coords, r_coords, cover_mbrs, nactive, tile_ids,
+            tq=tq, tr=tr, interpret=_INTERPRET,
+        )
+    else:
+        out = rk.overlap_counts_tiled_fused(
+            q_coords, r_coords, qmbrs, r_tile_mbrs, cover_mbrs,
+            tq=tq, tr=tr, interpret=_INTERPRET,
+        )
+    return out[:q]
+
+
+def _active_matrix_np(q_tile_mbrs: np.ndarray,
+                      r_tile_mbrs: np.ndarray) -> np.ndarray:
+    return (
+        (q_tile_mbrs[:, None, 0] <= r_tile_mbrs[None, :, 2])
+        & (r_tile_mbrs[None, :, 0] <= q_tile_mbrs[:, None, 2])
+        & (q_tile_mbrs[:, None, 1] <= r_tile_mbrs[None, :, 3])
+        & (r_tile_mbrs[None, :, 1] <= q_tile_mbrs[:, None, 3])
+    )
 
 
 def build_active_tiles(
@@ -104,21 +182,46 @@ def build_active_tiles(
 ) -> tuple[np.ndarray, np.ndarray]:
     """Host-side construction of the scalar-prefetch active-tile lists.
 
-    For each query tile, the list of rect tiles whose MBRs overlap it.
-    Dead entries point at tile 0 and are masked by ``nactive``."""
-    qo = (
-        (q_tile_mbrs[:, None, 0] <= r_tile_mbrs[None, :, 2])
-        & (r_tile_mbrs[None, :, 0] <= q_tile_mbrs[:, None, 2])
-        & (q_tile_mbrs[:, None, 1] <= r_tile_mbrs[None, :, 3])
-        & (r_tile_mbrs[None, :, 1] <= q_tile_mbrs[:, None, 3])
-    )
-    nq, nr = qo.shape
+    For each query tile, the list of rect tiles whose MBRs overlap it,
+    left-packed by a single stable argsort (active columns sort before dead
+    ones; stability preserves ascending tile order).  Dead entries point at
+    tile 0 and are masked by ``nactive``.
+    """
+    qo = _active_matrix_np(q_tile_mbrs, r_tile_mbrs)
     nactive = qo.sum(axis=1).astype(np.int32)
     max_active = max(int(nactive.max()), 1)
-    tile_ids = np.zeros((nq, max_active), dtype=np.int32)
-    for i in range(nq):
-        ids = np.nonzero(qo[i])[0]
-        tile_ids[i, : ids.size] = ids
+    order = np.argsort(~qo, axis=1, kind="stable")[:, :max_active]
+    keep = np.arange(max_active)[None, :] < nactive[:, None]
+    tile_ids = np.where(keep, order, 0).astype(np.int32)
+    return nactive, tile_ids
+
+
+def build_active_tiles_device(
+    q_tile_mbrs: jnp.ndarray,
+    r_tile_mbrs: jnp.ndarray,
+    cover_mbrs: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Device-side active-tile lists (trace-safe jnp twin of
+    :func:`build_active_tiles`).
+
+    The list width is the static worst case (all rect tiles active); dead
+    entries are skipped by the kernel's ``j < nactive`` guard.  When
+    ``cover_mbrs`` is given, query tiles missing every cover MBR get an empty
+    list — the tile-level half of the fused Phase-1 filter.
+    """
+    qo = ref.rect_overlap(
+        q_tile_mbrs[:, None, :], r_tile_mbrs[None, :, :])     # (nq, nr)
+    if cover_mbrs is not None:
+        qcov = ref.rect_overlap(
+            q_tile_mbrs[:, None, :], cover_mbrs[None, :, :]).any(axis=1)
+        qo = qo & qcov[:, None]
+    nq, nr = qo.shape
+    nactive = qo.sum(axis=1, dtype=jnp.int32)
+    order = jnp.argsort(
+        jnp.logical_not(qo).astype(jnp.int32), axis=1, stable=True
+    ).astype(jnp.int32)
+    keep = jax.lax.broadcasted_iota(jnp.int32, (nq, nr), 1) < nactive[:, None]
+    tile_ids = jnp.where(keep, order, 0)
     return nactive, tile_ids
 
 
@@ -130,7 +233,12 @@ def overlap_counts_sparse_host(
     tq: int = rk.DEFAULT_TQ,
     tr: int = rk.DEFAULT_TR,
 ) -> jnp.ndarray:
-    """Sparse (scalar-prefetch) path; tile lists built on host from MBRs."""
+    """Sparse (scalar-prefetch) path; tile lists built on host from MBRs.
+
+    Kept as the pre-cache reference pipeline: every call re-derives all tile
+    metadata on the host and round-trips it — exactly the per-batch cost the
+    device-resident engine amortizes away (measured in benchmarks/regress.py).
+    """
     q = queries.shape[0]
     if mask is None:
         mask = np.ones((q,), np.int32)

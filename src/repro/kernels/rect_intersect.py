@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for batched rectangle-overlap counting.
+"""Pallas TPU kernels for batched rectangle-overlap counting.
 
 This is the compute hot spot of the paper's DPU kernel (Algorithm 3 Phase 2:
 "scan leaf nodes in L_d (MRAM) and count overlaps").  On a DPU the scan is a
@@ -14,9 +14,16 @@ ymax) so a block is a (4, T) VMEM tile with the long dimension on lanes.
 Hierarchical pruning: the engine precomputes per-tile MBRs for both operands.
 A grid step whose rect-tile MBR does not overlap its query-tile MBR skips all
 compute (``@pl.when``) — the tile-granular analogue of not descending an
-R-tree subtree.  The scalar-prefetch variant (``sparse_overlap_counts`` in
-ops.py) additionally skips the *DMA* of dead tiles via a host-built active
-tile list; it is the §Perf hillclimb kernel.
+R-tree subtree.  The scalar-prefetch variant (``overlap_counts_sparse``)
+additionally skips the *DMA* of dead tiles via an active tile list; it is the
+§Perf hillclimb kernel.
+
+Fused Phase-1 (DESIGN.md Sec 4): the ``*_fused`` kernels take the device's
+covering level-1 MBRs directly and evaluate the paper's upper-level filter
+*inside* the kernel — a tile-level gate (skip the whole (TQ × TR) step when
+the query-tile MBR misses every cover MBR) plus a per-query gate folded into
+the count accumulation.  This removes the separate (Q, Kmax) boolean
+broadcast the engine used to materialize per batch.
 
 Grid: ``(num_query_tiles, num_rect_tiles)``; the rect axis is the reduction
 axis — counts accumulate into the (TQ,) output block, initialised at j == 0.
@@ -47,8 +54,52 @@ def _tile_overlap(qmbr, rmbr):
     )
 
 
+def _tile_hits_any_cover(qmbr, cover):
+    """True iff the query-tile MBR (4,) overlaps any cover MBR (K, 4)."""
+    hit = (
+        (qmbr[0] <= cover[:, 2:3])
+        & (cover[:, 0:1] <= qmbr[2])
+        & (qmbr[1] <= cover[:, 3:4])
+        & (cover[:, 1:2] <= qmbr[3])
+    )                                     # (K, 1)
+    return jnp.any(hit)
+
+
+def _phase1_query_mask(q_ref, cover):
+    """Per-query Phase-1 filter inside the kernel.
+
+    q_ref (4, TQ) coordinates vs cover (K, 4) MBRs → (TQ,) int32 — the
+    paper's "candidate level-1 node" test, evaluated where the data lives.
+    """
+    qx0 = q_ref[0, :][None, :]            # (1, TQ)
+    qy0 = q_ref[1, :][None, :]
+    qx1 = q_ref[2, :][None, :]
+    qy1 = q_ref[3, :][None, :]
+    hit = (
+        (cover[:, 0:1] <= qx1)
+        & (qx0 <= cover[:, 2:3])
+        & (cover[:, 1:2] <= qy1)
+        & (qy0 <= cover[:, 3:4])
+    )                                     # (K, TQ)
+    return jnp.any(hit, axis=0).astype(jnp.int32)
+
+
+def _pairwise_counts(q_ref, r_ref):
+    """(TQ,) int32 overlap counts of one (query-tile, rect-tile) pair."""
+    qx0 = q_ref[0, :][:, None]   # (TQ, 1)
+    qy0 = q_ref[1, :][:, None]
+    qx1 = q_ref[2, :][:, None]
+    qy1 = q_ref[3, :][:, None]
+    rx0 = r_ref[0, :][None, :]   # (1, TR)
+    ry0 = r_ref[1, :][None, :]
+    rx1 = r_ref[2, :][None, :]
+    ry1 = r_ref[3, :][None, :]
+    hits = (qx0 <= rx1) & (rx0 <= qx1) & (qy0 <= ry1) & (ry0 <= qy1)
+    return jnp.sum(hits.astype(jnp.int32), axis=1)
+
+
 def _count_kernel(q_ref, r_ref, qmbr_ref, rmbr_ref, mask_ref, out_ref):
-    """One (query-tile, rect-tile) grid step.
+    """One (query-tile, rect-tile) grid step with an explicit Phase-1 mask.
 
     q_ref    : (4, TQ) int32 VMEM — query coordinates
     r_ref    : (4, TR) int32 VMEM — rect coordinates
@@ -67,16 +118,7 @@ def _count_kernel(q_ref, r_ref, qmbr_ref, rmbr_ref, mask_ref, out_ref):
 
     @pl.when(prune_ok)
     def _compute():
-        qx0 = q_ref[0, :][:, None]   # (TQ, 1)
-        qy0 = q_ref[1, :][:, None]
-        qx1 = q_ref[2, :][:, None]
-        qy1 = q_ref[3, :][:, None]
-        rx0 = r_ref[0, :][None, :]   # (1, TR)
-        ry0 = r_ref[1, :][None, :]
-        rx1 = r_ref[2, :][None, :]
-        ry1 = r_ref[3, :][None, :]
-        hits = (qx0 <= rx1) & (rx0 <= qx1) & (qy0 <= ry1) & (ry0 <= qy1)
-        cnt = jnp.sum(hits.astype(jnp.int32), axis=1)          # (TQ,)
+        cnt = _pairwise_counts(q_ref, r_ref)
         cnt = cnt * (mask_ref[0, :] > 0).astype(jnp.int32)     # Phase-1 gate
         out_ref[0, :] += cnt
 
@@ -116,6 +158,67 @@ def overlap_counts_tiled(
     return out[0]
 
 
+def _count_kernel_fused(q_ref, r_ref, qmbr_ref, rmbr_ref, cover_ref, out_ref):
+    """Dense grid step with the Phase-1 cover filter fused into the kernel.
+
+    cover_ref : (K, 4) int32 — the device's covering level-1 MBRs (EMPTY
+    sentinel padding allowed; sentinels fail every overlap test).  Replaces
+    the host-materialized (Q, K) mask of the unfused path.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cover = cover_ref[...]
+    qmbr = qmbr_ref[0]
+    prune_ok = _tile_overlap(qmbr, rmbr_ref[0]) & _tile_hits_any_cover(
+        qmbr, cover)
+
+    @pl.when(prune_ok)
+    def _compute():
+        cnt = _pairwise_counts(q_ref, r_ref)
+        cnt = cnt * _phase1_query_mask(q_ref, cover)
+        out_ref[0, :] += cnt
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tq", "tr", "interpret")
+)
+def overlap_counts_tiled_fused(
+    q_coords: jnp.ndarray,     # (4, Qp) int32, Qp % tq == 0
+    r_coords: jnp.ndarray,     # (4, Rp) int32, Rp % tr == 0
+    q_tile_mbrs: jnp.ndarray,  # (Qp // tq, 4) int32
+    r_tile_mbrs: jnp.ndarray,  # (Rp // tr, 4) int32
+    cover_mbrs: jnp.ndarray,   # (K, 4) int32 covering L1 MBRs, EMPTY-padded
+    *,
+    tq: int = DEFAULT_TQ,
+    tr: int = DEFAULT_TR,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused-Phase-1 tiled kernel call.  Returns (Qp,) int32 counts."""
+    qp, rp = q_coords.shape[1], r_coords.shape[1]
+    assert qp % tq == 0 and rp % tr == 0, (qp, tq, rp, tr)
+    nq, nr = qp // tq, rp // tr
+    k = cover_mbrs.shape[0]
+    out = pl.pallas_call(
+        _count_kernel_fused,
+        grid=(nq, nr),
+        in_specs=[
+            pl.BlockSpec((4, tq), lambda i, j: (0, i)),
+            pl.BlockSpec((4, tr), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((k, 4), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, qp), jnp.int32),
+        interpret=interpret,
+    )(q_coords, r_coords, q_tile_mbrs, r_tile_mbrs, cover_mbrs)
+    return out[0]
+
+
 # ---------------------------------------------------------------------------
 # Scalar-prefetch variant: skips DMA of pruned tiles (hillclimb kernel).
 # ---------------------------------------------------------------------------
@@ -126,9 +229,9 @@ def _sparse_count_kernel(
     q_ref, r_ref, mask_ref, out_ref,
 ):
     """Grid (nq, max_active): step (i, j) processes the j-th *active* rect
-    tile of query tile i.  ``tile_ids[i, j]`` was built on the host from the
-    level-1 MBRs, so dead tiles are never even DMA'd — the faithful analogue
-    of hierarchical pruning at DMA granularity."""
+    tile of query tile i.  ``tile_ids[i, j]`` is built from the tile MBRs, so
+    dead tiles are never even DMA'd — the faithful analogue of hierarchical
+    pruning at DMA granularity."""
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -138,16 +241,7 @@ def _sparse_count_kernel(
 
     @pl.when(j < nactive_ref[i])
     def _compute():
-        qx0 = q_ref[0, :][:, None]
-        qy0 = q_ref[1, :][:, None]
-        qx1 = q_ref[2, :][:, None]
-        qy1 = q_ref[3, :][:, None]
-        rx0 = r_ref[0, :][None, :]
-        ry0 = r_ref[1, :][None, :]
-        rx1 = r_ref[2, :][None, :]
-        ry1 = r_ref[3, :][None, :]
-        hits = (qx0 <= rx1) & (rx0 <= qx1) & (qy0 <= ry1) & (ry0 <= qy1)
-        cnt = jnp.sum(hits.astype(jnp.int32), axis=1)
+        cnt = _pairwise_counts(q_ref, r_ref)
         cnt = cnt * (mask_ref[0, :] > 0).astype(jnp.int32)
         out_ref[0, :] += cnt
 
@@ -185,4 +279,62 @@ def overlap_counts_sparse(
         out_shape=jax.ShapeDtypeStruct((1, qp), jnp.int32),
         interpret=interpret,
     )(nactive, tile_ids, q_coords, r_coords, mask[None, :])
+    return out[0]
+
+
+def _sparse_count_kernel_fused(
+    nactive_ref, tile_ids_ref,           # scalar-prefetch operands (SMEM)
+    q_ref, r_ref, cover_ref, out_ref,
+):
+    """Sparse grid step with fused Phase-1: the active-tile list already
+    encodes the tile-level cover gate (built on device from cached rect-tile
+    MBRs); the per-query cover test runs here against the (K, 4) covers."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(j < nactive_ref[i])
+    def _compute():
+        cnt = _pairwise_counts(q_ref, r_ref)
+        cnt = cnt * _phase1_query_mask(q_ref, cover_ref[...])
+        out_ref[0, :] += cnt
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tq", "tr", "interpret")
+)
+def overlap_counts_sparse_fused(
+    q_coords: jnp.ndarray,    # (4, Qp)
+    r_coords: jnp.ndarray,    # (4, Rp)
+    cover_mbrs: jnp.ndarray,  # (K, 4) covering L1 MBRs, EMPTY-padded
+    nactive: jnp.ndarray,     # (nq,) int32
+    tile_ids: jnp.ndarray,    # (nq, max_active) int32
+    *,
+    tq: int = DEFAULT_TQ,
+    tr: int = DEFAULT_TR,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    qp, rp = q_coords.shape[1], r_coords.shape[1]
+    nq = qp // tq
+    max_active = tile_ids.shape[1]
+    k = cover_mbrs.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nq, max_active),
+        in_specs=[
+            pl.BlockSpec((4, tq), lambda i, j, na, tid: (0, i)),
+            pl.BlockSpec((4, tr), lambda i, j, na, tid: (0, tid[i, j])),
+            pl.BlockSpec((k, 4), lambda i, j, na, tid: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq), lambda i, j, na, tid: (0, i)),
+    )
+    out = pl.pallas_call(
+        _sparse_count_kernel_fused,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, qp), jnp.int32),
+        interpret=interpret,
+    )(nactive, tile_ids, q_coords, r_coords, cover_mbrs)
     return out[0]

@@ -167,14 +167,17 @@ def lower_spatial(name: str, mesh, batch: int = 10_000) -> tuple:
     leaves = math.ceil(n / b)
     lp = math.ceil(leaves / d)
     kmax = min(math.ceil(leaves / f), lp // f + 2)
-    leaf_sds = jax.ShapeDtypeStruct((d * lp * b, 4), jnp.int32)
+    tr = sc.kernel_tr
+    rp = math.ceil(lp * b / tr) * tr      # per-device slice, tile-padded
+    coords_sds = jax.ShapeDtypeStruct((4, d * rp), jnp.int32)
+    rmbr_sds = jax.ShapeDtypeStruct((d, rp // tr, 4), jnp.int32)
     cover_sds = jax.ShapeDtypeStruct((d, max(kmax, 1), 4), jnp.int32)
     q_sds = jax.ShapeDtypeStruct((batch, 4), jnp.int32)
 
     with use_mesh(mesh):
         step = spatial_engine.make_query_step(
-            mesh, impl="xla", tq=sc.kernel_tq, tr=sc.kernel_tr)
-        lowered = step.lower(leaf_sds, cover_sds, q_sds)
+            mesh, impl="xla", tq=sc.kernel_tq, tr=tr)
+        lowered = step.lower(coords_sds, rmbr_sds, cover_sds, q_sds)
     # "useful work" for the spatial engine: one int comparison quadruple per
     # (query, local rect) — the two-phase filter makes most of it skippable,
     # so model_flops is the post-filter lower bound ≈ batch × N × selectivity.

@@ -17,6 +17,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import griffin, layers, moe, ssm, transformer, whisper
 from repro.models.base import ModelConfig
 from repro.parallel.sharding import shard
@@ -118,7 +119,7 @@ def _vocab_parallel_xent(cfg, params, hidden, targets, weights, mesh):
         axes = ("model",) + dp_axes if seq_ok else dp_axes
         return jax.lax.psum(total, axes) if axes else total
 
-    total = jax.shard_map(
+    total = compat.shard_map(
         body, mesh=mesh,
         in_specs=(h_spec, t_spec, t_spec, head_spec),
         out_specs=jax.sharding.PartitionSpec(),

@@ -24,6 +24,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.base import ModelConfig
@@ -187,7 +189,7 @@ def forward(cfg: ModelConfig, params, batch, *, return_cache: bool = False,
 
     def unit_body(x, unit_params):
         # pin the scan carry against convert hoisting (see transformer)
-        x = jax.lax.optimization_barrier(x)
+        x = compat.opt_barrier(x)
         for idx, kind in enumerate(pat):
             lp = unit_params[f"b{idx}_{kind}"]
             if kind == "rec":

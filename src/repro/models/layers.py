@@ -15,6 +15,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.parallel.sharding import gather_safe_mode, shard
 
 COMPUTE_DTYPE = jnp.bfloat16
@@ -89,7 +90,7 @@ def embed_lookup(embed: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
     if gather_safe_mode():
         oh = jax.nn.one_hot(tokens, embed.shape[0], dtype=embed.dtype)
         return oh @ embed
-    embed = jax.lax.optimization_barrier(embed)
+    embed = compat.opt_barrier(embed)
     return embed[tokens]
 
 
@@ -100,7 +101,7 @@ def wcast(w: jnp.ndarray, dtype) -> jnp.ndarray:
     on qwen2-vl train_4k, §Perf D4)."""
     if w.dtype == dtype:
         return w
-    return jax.lax.optimization_barrier(w.astype(dtype))
+    return compat.opt_barrier(w.astype(dtype))
 
 
 def act_fn(name: str) -> Callable:

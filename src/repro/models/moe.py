@@ -22,6 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.base import ModelConfig
@@ -185,7 +186,7 @@ def moe_ffn(cfg: ModelConfig, lp: dict, x: jnp.ndarray) -> jnp.ndarray:
                     y, "model", scatter_dimension=1, tiled=True)
             return jax.lax.psum(y, "model")
 
-        y = jax.shard_map(
+        y = compat.shard_map(
             body, mesh=mesh,
             in_specs=(x_spec, jax.sharding.PartitionSpec(),
                       w_spec, w_spec, w_spec),
@@ -206,7 +207,7 @@ def moe_ffn(cfg: ModelConfig, lp: dict, x: jnp.ndarray) -> jnp.ndarray:
 
 def _block(cfg: ModelConfig, lp, x, cos, sin):
     # see transformer.forward: pin the scan carry against convert hoisting
-    x = jax.lax.optimization_barrier(x)
+    x = compat.opt_barrier(x)
     x, kv = T.attn_block(cfg, lp, x, cos, sin, window=cfg.window)
     h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
     x = x + moe_ffn(cfg, lp, h)

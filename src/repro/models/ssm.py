@@ -19,6 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.models import layers as L
 from repro.models.base import ModelConfig
 from repro.parallel.sharding import shard
@@ -143,7 +145,7 @@ def forward(cfg: ModelConfig, params, batch, *, return_cache: bool = False,
 
     def body(x, lp):
         # pin the scan carry against convert hoisting (see transformer)
-        x = jax.lax.optimization_barrier(x)
+        x = compat.opt_barrier(x)
         x, h_f = block(cfg, lp, x)
         return shard(x, "batch", "seq", None), h_f
 

@@ -14,6 +14,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.models import layers as L
 from repro.models.base import ModelConfig
 from repro.parallel.sharding import shard
@@ -176,7 +178,7 @@ def forward(cfg: ModelConfig, params, batch, *, return_cache: bool = False,
         # pin the carry inside the loop: without this XLA hoists the
         # bf16->f32 convert of the whole (L, B, S, d) saved-carry stack out
         # of the backward while-loop (measured 10.7 GB extra on qwen2-vl-72b)
-        x = jax.lax.optimization_barrier(x)
+        x = compat.opt_barrier(x)
         x, kv = attn_block(cfg, lp, x, cos, sin, window=cfg.window)
         x = mlp_block(cfg, lp, x)
         return shard(x, "batch", "seq", None), kv

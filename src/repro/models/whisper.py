@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.base import ModelConfig
@@ -113,7 +115,7 @@ def encode(cfg: ModelConfig, params, frames: jnp.ndarray) -> jnp.ndarray:
 
     def body(x, lp):
         # pin the scan carry against convert hoisting (see transformer)
-        x = jax.lax.optimization_barrier(x)
+        x = compat.opt_barrier(x)
         h = _ln(x, lp, "attn_norm", cfg.norm_eps)
         o, _ = _mha(cfg, lp, h, h, "", causal=False)
         x = x + o
@@ -147,7 +149,7 @@ def forward(cfg: ModelConfig, params, batch, *, return_cache: bool = False,
 
     def body(x, lp):
         # pin the scan carry against convert hoisting (see transformer)
-        x = jax.lax.optimization_barrier(x)
+        x = compat.opt_barrier(x)
         h = _ln(x, lp, "attn_norm", cfg.norm_eps)
         o, kv = _mha(cfg, lp, h, h, "", causal=True)
         x = x + o

@@ -18,6 +18,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def _quantize(x: jnp.ndarray):
     absmax = jnp.max(jnp.abs(x)) + 1e-12
@@ -32,7 +34,7 @@ def int8_psum_mean(tree: Any, axis_name: str, err: Any | None = None):
     Returns (reduced_tree, new_err).  `err` is a tree like `tree` (fp32) or
     None on the first step.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
 
     def one(g, e):
         g32 = g.astype(jnp.float32)

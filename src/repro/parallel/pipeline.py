@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.models import api, layers as L, transformer as T
 from repro.models.base import ModelConfig
 from repro.parallel.sharding import exclude_axes, shard
@@ -115,7 +116,7 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh: Mesh, num_microbatches: int):
                 params_s["embed"].T if "lm_head" not in params_s else None)
             if "lm_head" not in params_s:
                 lm_head = params_s["embed"].T
-            loss = jax.shard_map(
+            loss = compat.shard_map(
                 per_stage, mesh=mesh,
                 in_specs=(P("pod"), P(), P(), P(), P()),
                 out_specs=P(),

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.data import tokens as tokmod
 from repro.models import api
 from repro.models.base import ModelConfig
@@ -118,7 +119,7 @@ def make_train_step(
 
             batch_specs = jax.tree_util.tree_map(
                 lambda x: P("pod") if x.ndim >= 2 else P(), batch)
-            loss, grads, err = jax.shard_map(
+            loss, grads, err = compat.shard_map(
                 per_pod, mesh=mesh,
                 in_specs=(P(), P(), batch_specs),
                 out_specs=(P(), P(), P()),

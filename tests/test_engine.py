@@ -14,6 +14,8 @@ import pytest
 
 import jax
 
+from repro import compat
+
 from repro.core import engine as beng
 from repro.core import rtree, subtree
 from repro.data import spider, datasets
@@ -23,8 +25,7 @@ REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def _mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def test_broadcast_engine_single_device():
@@ -80,14 +81,14 @@ _MULTIDEV_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
     import jax
+    from repro import compat
     from repro.core import engine as beng
     from repro.core import rtree, subtree
     from repro.data import spider, datasets
     from repro.kernels import ref
 
     assert jax.device_count() == 8
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     rects = spider.diagonal(8000, seed=11, max_size=0.01)
     queries = datasets.make_queries(rects, 0.03, seed=12)
     want = ref.overlap_counts_np(queries, rects)
@@ -139,3 +140,120 @@ def test_sort_queries_exact():
     # the ordering really is a permutation
     order = morton_order(queries)
     assert sorted(order.tolist()) == list(range(len(queries)))
+
+
+def test_steady_state_zero_host_metadata(monkeypatch):
+    """Acceptance: the steady-state batch loop does zero per-batch host-side
+    metadata construction.  After warmup (one trace), further batches must
+    not retrace the step and must never call the host metadata builders
+    (tile_mbrs over leaf arrays / Python build_active_tiles)."""
+    from repro.kernels import ops as kops
+
+    rects = spider.uniform(4000, seed=31, max_size=0.01)
+    queries = datasets.make_queries(rects, 0.5, seed=32)   # 2000 queries
+    tree = rtree.build_str_3level(rects, leaf_capacity=32, fanout=8)
+    eng = beng.BroadcastEngine(tree, _mesh1(), batch_size=128)
+
+    eng.query(queries[:128])               # warmup: compile once
+    traces_after_warmup = eng.trace_count
+    assert traces_after_warmup >= 1
+
+    calls = {"tile_mbrs": 0, "build_active_tiles": 0}
+    real_tile_mbrs = kops.tile_mbrs
+    real_bat = kops.build_active_tiles
+
+    def counting_tile_mbrs(*a, **k):
+        calls["tile_mbrs"] += 1
+        return real_tile_mbrs(*a, **k)
+
+    def counting_bat(*a, **k):
+        calls["build_active_tiles"] += 1
+        return real_bat(*a, **k)
+
+    monkeypatch.setattr(kops, "tile_mbrs", counting_tile_mbrs)
+    monkeypatch.setattr(kops, "build_active_tiles", counting_bat)
+
+    got = eng.query(queries)               # 16 steady-state batches
+    want = ref.overlap_counts_np(queries, rects)
+    np.testing.assert_array_equal(got, want)
+    assert eng.trace_count == traces_after_warmup, "step retraced per batch"
+    assert calls == {"tile_mbrs": 0, "build_active_tiles": 0}, calls
+
+
+@pytest.mark.parametrize("impl", ["pallas", "sparse", "xla"])
+def test_broadcast_engine_impl_sweep(impl):
+    """All three kernel impls must be exact through the full engine path —
+    fused Phase-1, cached tile metadata, streaming loop, tail-batch pad."""
+    rects = spider.uniform(900, seed=33, max_size=0.02)
+    queries = datasets.make_queries(rects, 0.2, seed=34)   # 180 queries
+    tree = rtree.build_str_3level(rects, leaf_capacity=16, fanout=4)
+    eng = beng.BroadcastEngine(tree, _mesh1(), impl=impl, tq=16, tr=64,
+                               batch_size=50)              # uneven tail
+    got = eng.query(queries)
+    want = ref.overlap_counts_np(queries, rects)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("impl", ["sparse", "xla"])
+def test_subtree_engine_impl_sweep(impl):
+    rects = spider.gaussian(800, seed=35, max_size=0.02)
+    queries = datasets.make_queries(rects, 0.2, seed=36)
+    eng = subtree.SubtreeEngine(rects, _mesh1(), leaf_capacity=64,
+                                impl=impl, tq=16, tr=64, batch_size=48)
+    got = eng.query(queries)
+    want = ref.overlap_counts_np(queries, rects)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_shard_tree_metadata_cache():
+    """Placement-time cache: per-device tile MBRs equal the kernel helper
+    applied to each device slice, and occupancy accounts for every rect."""
+    from repro.kernels import ops as kops
+    import jax.numpy as jnp
+
+    rects = spider.uniform(3000, seed=37)
+    tree = rtree.build_str_3level(rects, leaf_capacity=16, fanout=8)
+    layout = beng.shard_tree(tree, 4, tile=64)
+    d, rp = 4, layout.rects_per_device
+    assert rp % 64 == 0
+    per_dev = layout.leaf_rects_flat.reshape(d, rp, 4)
+    for dev in range(d):
+        want = np.asarray(kops.tile_mbrs(jnp.asarray(per_dev[dev]), 64))
+        np.testing.assert_array_equal(layout.rect_tile_mbrs[dev], want)
+    assert int(layout.tile_occupancy.sum()) == 3000
+    assert layout.metadata_bytes > 0
+
+
+def test_morton_order_wide_coordinates():
+    """Satellite: 21-bit interleave — clusters separated by ~2^30 must not
+    collapse into one Z-code bucket (the old 10-bit code saw identical codes
+    for everything beyond 2^22 with the default shift)."""
+    from repro.core.engine import morton_order
+    rng = np.random.default_rng(38)
+
+    def cluster(offset, n=64):
+        lo = rng.integers(0, 1 << 20, (n, 2)) + offset
+        return np.concatenate([lo, lo + 10], axis=1).astype(np.int64)
+
+    a = cluster(0)
+    b = cluster(1 << 30)
+    queries = np.concatenate([a, b])[rng.permutation(128)]
+    order = morton_order(queries.astype(np.int32))
+    is_b = (queries[order][:, 0] >= (1 << 29)).astype(int)
+    # a correct wide Z-code sorts one cluster entirely before the other
+    assert (np.diff(is_b) >= 0).all() or (np.diff(is_b) <= 0).all()
+    assert sorted(order.tolist()) == list(range(128))
+
+
+def test_query_edge_sizes():
+    """Zero/one-query calls (serving edge): no crash, exact, empty-in →
+    empty-out even with Morton sorting enabled."""
+    rects = spider.gaussian(1000, seed=41, max_size=0.02)
+    tree = rtree.build_str_3level(rects, leaf_capacity=16, fanout=4)
+    eng = beng.BroadcastEngine(tree, _mesh1(), batch_size=64,
+                               sort_queries=True)
+    queries = datasets.make_queries(rects, 0.1, seed=42)
+    np.testing.assert_array_equal(
+        eng.query(queries[:1]), ref.overlap_counts_np(queries[:1], rects))
+    out = eng.query(np.zeros((0, 4), np.int32))
+    assert out.shape == (0,) and out.dtype == np.int32

@@ -113,3 +113,137 @@ def test_property_pallas_equals_oracle(q, r, seed):
     got_xla = np.asarray(ops.overlap_counts(
         jnp.asarray(queries), jnp.asarray(rects), impl="xla"))
     np.testing.assert_array_equal(got_xla, want)
+
+
+# ---------------------------------------------------------------------------
+# impl="sparse" routing + fused-Phase-1 paths on adversarial layouts
+# ---------------------------------------------------------------------------
+
+EMPTY = np.array([2**31 - 1, 2**31 - 1, -2**31, -2**31], np.int32)
+
+
+def _global_cover(rects, pad_to=3):
+    """A (pad_to, 4) cover set: the global MBR plus EMPTY sentinel padding."""
+    cov = np.array([[rects[:, 0].min(), rects[:, 1].min(),
+                     rects[:, 2].max(), rects[:, 3].max()]], np.int32)
+    return np.concatenate([cov, np.tile(EMPTY, (pad_to - 1, 1))])
+
+
+def _fused_operands(rects, tr):
+    rp = np.asarray(ops.pad_rects_to(jnp.asarray(rects), tr))
+    rmbrs = np.asarray(ops.tile_mbrs(jnp.asarray(rp), tr))
+    return jnp.asarray(np.ascontiguousarray(rp.T)), jnp.asarray(rmbrs)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "sparse", "xla"])
+def test_impl_sparse_routes_and_matches(impl):
+    """impl="sparse" must actually run (historically it silently fell
+    through to the dense Pallas path) and stay exact-int equal to ref."""
+    queries = _rand(50, seed=11, scale=5000)
+    rects = _rand(200, seed=12, scale=5000, degenerate=True)
+    want = np.asarray(ref.overlap_counts_ref(jnp.asarray(queries),
+                                             jnp.asarray(rects)))
+    got = np.asarray(ops.overlap_counts(
+        jnp.asarray(queries), jnp.asarray(rects), impl=impl, tq=8, tr=32))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_unknown_impl_raises():
+    queries = _rand(8, seed=13)
+    rects = _rand(16, seed=14)
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.overlap_counts(jnp.asarray(queries), jnp.asarray(rects),
+                           impl="dense")
+
+
+def test_sparse_mask_gates():
+    """Phase-1 mask must gate the sparse kernel exactly like the others."""
+    queries = _rand(40, seed=15)
+    rects = _rand(128, seed=16)
+    mask = (np.arange(40) % 2 == 0).astype(np.int32)
+    want = np.asarray(ref.overlap_counts_ref(jnp.asarray(queries),
+                                             jnp.asarray(rects))) * mask
+    got = np.asarray(ops.overlap_counts(
+        jnp.asarray(queries), jnp.asarray(rects), jnp.asarray(mask),
+        impl="sparse", tq=8, tr=16))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "sparse", "xla"])
+def test_fused_all_empty_tail_tiles(impl):
+    """A rect array dominated by EMPTY-padded tail tiles: every padded tile
+    gets the EMPTY MBR, is never active, and never counts."""
+    rects = _rand(10, seed=17, scale=1000)
+    rects = np.concatenate([rects, np.tile(EMPTY, (246, 1))])  # 8 tiles of 32
+    queries = _rand(24, seed=18, scale=1200)
+    want = np.asarray(ref.overlap_counts_ref(jnp.asarray(queries),
+                                             jnp.asarray(rects[:10])))
+    r_coords, rmbrs = _fused_operands(rects, 32)
+    got = np.asarray(ops.overlap_counts_fused(
+        jnp.asarray(queries), r_coords, rmbrs,
+        jnp.asarray(_global_cover(rects[:10])), impl=impl, tq=8, tr=32))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "sparse", "xla"])
+def test_fused_query_tile_zero_active(impl):
+    """Whole query tiles with zero active rect tiles (all queries far away)
+    must come back exactly zero — the sparse kernel's j<nactive guard and the
+    dense kernel's tile gate both short-circuit, but the output block still
+    has to be initialised."""
+    rects = _rand(96, seed=19, scale=1000)
+    near = _rand(16, seed=20, scale=1000)
+    far = _rand(16, seed=21, scale=1000) + 50_000_000
+    queries = np.concatenate([far[:8], near, far[8:]]).astype(np.int32)
+    want = np.asarray(ref.overlap_counts_ref(jnp.asarray(queries),
+                                             jnp.asarray(rects)))
+    assert want[:8].sum() == 0 and want[24:].sum() == 0
+    r_coords, rmbrs = _fused_operands(rects, 32)
+    got = np.asarray(ops.overlap_counts_fused(
+        jnp.asarray(queries), r_coords, rmbrs,
+        jnp.asarray(_global_cover(rects)), impl=impl, tq=8, tr=32))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "sparse", "xla"])
+def test_fused_partial_covers_gate_per_query(impl):
+    """Covers that deliberately exclude part of the space: the fused Phase-1
+    filter must zero exactly the queries that miss every cover — identical
+    semantics to the unfused mask across every impl."""
+    rects = _rand(64, seed=22, scale=2000)
+    queries = _rand(32, seed=23, scale=4000)
+    covers = np.array([[0, 0, 1000, 1000],
+                       [1500, 1500, 1800, 1800]], np.int32)
+    mask = np.asarray(ref.rect_overlap(
+        jnp.asarray(queries)[:, None, :], jnp.asarray(covers)[None]))
+    mask = mask.any(axis=1)
+    want = np.asarray(ref.overlap_counts_ref(jnp.asarray(queries),
+                                             jnp.asarray(rects)))
+    want = np.where(mask, want, 0)
+    r_coords, rmbrs = _fused_operands(rects, 16)
+    got = np.asarray(ops.overlap_counts_fused(
+        jnp.asarray(queries), r_coords, rmbrs, jnp.asarray(covers),
+        impl=impl, tq=8, tr=16))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_build_active_tiles_vectorized_matches_bruteforce():
+    """The argsort-based construction equals the per-row nonzero scan."""
+    rng = np.random.default_rng(24)
+    qmbrs = np.sort(rng.integers(0, 500, (13, 2, 2)), axis=1)
+    qmbrs = qmbrs.reshape(13, 4).astype(np.int32)
+    rmbrs = np.sort(rng.integers(0, 500, (9, 2, 2)), axis=1)
+    rmbrs = rmbrs.reshape(9, 4).astype(np.int32)
+    nactive, tile_ids = ops.build_active_tiles(qmbrs, rmbrs)
+    qo = ops._active_matrix_np(qmbrs, rmbrs)
+    for i in range(13):
+        ids = np.nonzero(qo[i])[0]
+        assert nactive[i] == ids.size
+        np.testing.assert_array_equal(tile_ids[i, :ids.size], ids)
+        assert (tile_ids[i, ids.size:] == 0).all()
+    # device twin agrees (full static width, dead entries zeroed)
+    na_d, tid_d = ops.build_active_tiles_device(
+        jnp.asarray(qmbrs), jnp.asarray(rmbrs))
+    np.testing.assert_array_equal(np.asarray(na_d), nactive)
+    np.testing.assert_array_equal(
+        np.asarray(tid_d)[:, :tile_ids.shape[1]], tile_ids)
