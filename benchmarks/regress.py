@@ -170,7 +170,25 @@ def _pipeline_ab(tree, rects, queries, mesh, batch_size, label, repeats=3):
     return row, current
 
 
+def _pallint_gate() -> None:
+    """Refuse to record a perf baseline from a doctrine-violating tree.
+
+    A benchmark number taken while the hot path silently syncs or retraces
+    would poison the PR-over-PR trajectory, so the lint pass must be clean
+    before BENCH_pipeline.json is written."""
+    from repro.analysis.pallint.core import lint_paths, registry, render_human
+
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    findings = lint_paths([os.path.join(repo, "src"),
+                           os.path.join(repo, "benchmarks")])
+    if findings:
+        raise SystemExit(
+            "pallint gate failed; not recording a perf baseline:\n"
+            + render_human(findings, registry()))
+
+
 def run(full: bool = False) -> list[dict]:
+    _pallint_gate()
     n = 100_000 if full else 20_000
     nq = 8192
     rects = spider.uniform(n, seed=5)

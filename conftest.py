@@ -1,0 +1,19 @@
+"""Repo-root pytest bootstrap.
+
+Two jobs that must live at the rootdir:
+
+* put ``src/`` on ``sys.path`` so the suite runs without an installed
+  package (mirrors the documented ``PYTHONPATH=src`` invocation);
+* register the pallint trace-guard plugin (``pytest_plugins`` is only
+  honored in the rootdir conftest), exposing the shared
+  ``pallint_steady_state`` / ``pallint_compile_count`` fixtures to every
+  test.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+pytest_plugins = ("repro.analysis.pallint.pytest_plugin",)

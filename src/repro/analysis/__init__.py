@@ -1,0 +1,1 @@
+# Static + runtime analysis tooling for the repro codebase (pallint).

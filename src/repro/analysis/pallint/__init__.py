@@ -1,0 +1,11 @@
+"""pallint — device-residency lint + compile/transfer guard subsystem.
+
+Enforces the hot-path doctrine (DESIGN.md Sec 10): static AST rules
+(PL1xx), Pallas contract checks (PC2xx), and runtime trace guards (GR3xx).
+
+    python -m repro.analysis.pallint src tests benchmarks
+"""
+from repro.analysis.pallint.core import (  # noqa: F401
+    Finding, Rule, lint_file, lint_paths, registry)
+from repro.analysis.pallint.guards import (  # noqa: F401
+    GuardViolation, compile_count, steady_state)

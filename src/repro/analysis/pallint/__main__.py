@@ -1,0 +1,5 @@
+import sys
+
+from repro.analysis.pallint.cli import main
+
+sys.exit(main())

@@ -1,0 +1,90 @@
+"""pallint CLI.
+
+Usage::
+
+    python -m repro.analysis.pallint src tests benchmarks
+    python -m repro.analysis.pallint src --json
+    python -m repro.analysis.pallint --guards
+    python -m repro.analysis.pallint --list-rules
+
+Exit status 0 when the tree is doctrine-clean, 1 when any finding is
+reported (each with its rule ID and location), 2 on usage errors.
+
+When the path list contains both library code and a test tree, the PC205
+interpret-twin coverage pass runs across them; ``--guards`` additionally
+drives the runtime trace-guard self-check over the public jitted
+entrypoints (slow: it builds tiny engines and compiles real steps).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.pallint import contracts
+from repro.analysis.pallint.core import (
+    lint_paths, registry, render_human, render_json)
+
+
+def _split_paths(paths):
+    """Partition into (library, tests) path groups for the coverage pass."""
+    tests = [p for p in paths
+             if os.path.basename(os.path.normpath(p)).startswith("test")
+             or "tests" in os.path.normpath(p).split(os.sep)]
+    lib = [p for p in paths if p not in tests]
+    return lib, tests
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="pallint",
+        description="device-residency lint + compile/transfer guard for the "
+                    "repro hot path")
+    parser.add_argument("paths", nargs="*", default=[],
+                        help="files/directories to lint")
+    parser.add_argument("--json", action="store_true",
+                        help="machine-readable output")
+    parser.add_argument("--guards", action="store_true",
+                        help="run the runtime trace-guard self-check over "
+                             "the public jitted entrypoints")
+    parser.add_argument("--guard-only", action="append", default=None,
+                        metavar="NAME",
+                        help="restrict --guards to one entrypoint check")
+    parser.add_argument("--no-coverage", action="store_true",
+                        help="skip the PC205 interpret-twin coverage pass")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    rules = registry()
+    if args.list_rules:
+        for rid, rule in sorted(rules.items()):
+            print(f"{rid} [{rule.scope}] {rule.doctrine}")
+        return 0
+
+    if not args.paths and not args.guards:
+        parser.print_usage(sys.stderr)
+        return 2
+
+    findings = lint_paths(args.paths) if args.paths else []
+
+    lib, tests = _split_paths(args.paths)
+    coverage = None
+    if lib and tests and not args.no_coverage:
+        findings.extend(contracts.coverage_findings(lib, tests))
+        coverage = contracts.coverage_report(lib, tests)
+
+    if args.guards:
+        from repro.analysis.pallint import guards
+        findings.extend(guards.run_entrypoint_checks(args.guard_only))
+
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    if args.json:
+        payload = json.loads(render_json(findings))
+        if coverage is not None:
+            payload["coverage"] = coverage
+        print(json.dumps(payload, indent=2))
+    else:
+        print(render_human(findings, rules))
+    return 1 if findings else 0

@@ -1,0 +1,360 @@
+"""pallint Pallas contract rules (PC2xx): static validation of every
+``pl.pallas_call`` site.
+
+The kernels are exact-int reproductions of the paper's DPU scan; their
+BlockSpec plumbing is where silent corruption hides (an index map that walks
+off the operand, a grid extent that silently truncates a non-divisible
+shape, a kernel signature drifting out of sync with its specs).  These
+contracts are checkable from the AST because this codebase's doctrine keeps
+pallas_call sites literal: tuple-literal grids and block shapes, lambda
+index maps, specs built in the same function.
+
+PC201 index-map-arity      every BlockSpec index map takes exactly
+                           ``len(grid) + num_scalar_prefetch`` arguments.
+PC202 index-map-form       index maps return a tuple with one element per
+                           block dimension; each element is a constant, a
+                           grid variable, or a prefetch-table lookup
+                           (``tid[i, j]``) — anything else cannot be bounds-
+                           checked against the grid and is rejected.
+PC203 kernel-signature     the kernel function takes exactly
+                           ``num_scalar_prefetch + len(in_specs) +
+                           len(out_specs)`` refs; the call site passes
+                           ``num_scalar_prefetch + len(in_specs)`` operands;
+                           out_specs block rank matches out_shape rank.
+PC204 tile-divisibility    a grid extent computed as ``X // t`` requires an
+                           ``assert X % t == 0`` guard in the same function
+                           — otherwise a non-divisible operand silently
+                           drops its tail tile.
+PC205 interpret-twin       every kernel wrapper (function containing a
+                           pallas_call) is exercised by name from the test
+                           suite (the interpret-mode reference-twin tests);
+                           reported by the cross-file coverage pass.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.pallint.core import (
+    SCOPE_ALL, Finding, register, walk_python_files)
+from repro.analysis.pallint.rules import ModuleInfo, dotted
+
+
+class PallasSite:
+    """One parsed ``pl.pallas_call(...)`` site."""
+
+    def __init__(self, info: ModuleInfo, call: ast.Call):
+        self.info = info
+        self.call = call
+        self.line = call.lineno
+        self.kernel_name = (call.args[0].id
+                            if call.args and isinstance(call.args[0], ast.Name)
+                            else None)
+        self.enclosing = info.enclosing_function(call)
+        kw = {k.arg: k.value for k in call.keywords}
+        self.num_prefetch = 0
+        grid_src = kw
+        if "grid_spec" in kw:
+            spec_call = self._resolve_grid_spec(kw["grid_spec"])
+            if spec_call is not None:
+                grid_src = {k.arg: k.value for k in spec_call.keywords}
+                np_node = grid_src.get("num_scalar_prefetch")
+                if isinstance(np_node, ast.Constant):
+                    self.num_prefetch = int(np_node.value)
+        self.grid = grid_src.get("grid")
+        self.in_specs = grid_src.get("in_specs")
+        self.out_specs = grid_src.get("out_specs")
+        self.out_shape = kw.get("out_shape")
+        # operand list: the pallas_call result is immediately applied
+        parent = info._parents.get(call)
+        self.operands = (parent.args
+                         if isinstance(parent, ast.Call)
+                         and parent.func is call else None)
+
+    def _resolve_grid_spec(self, node: ast.AST) -> ast.Call | None:
+        if isinstance(node, ast.Call):
+            return node
+        if isinstance(node, ast.Name) and self.enclosing is not None:
+            for stmt in ast.walk(self.enclosing):
+                if (isinstance(stmt, ast.Assign)
+                        and isinstance(stmt.value, ast.Call)
+                        and any(isinstance(t, ast.Name) and t.id == node.id
+                                for t in stmt.targets)):
+                    d = dotted(stmt.value.func, self.info.aliases) or ""
+                    if d.endswith("GridSpec"):
+                        return stmt.value
+        return None
+
+    @property
+    def grid_len(self) -> int | None:
+        if isinstance(self.grid, ast.Tuple):
+            return len(self.grid.elts)
+        return None
+
+    def block_specs(self) -> list[tuple[ast.Call, str]]:
+        """All BlockSpec constructor calls at this site, tagged in/out."""
+        out = []
+        if isinstance(self.in_specs, (ast.List, ast.Tuple)):
+            for el in self.in_specs.elts:
+                if isinstance(el, ast.Call):
+                    out.append((el, "in"))
+        if isinstance(self.out_specs, ast.Call):
+            out.append((self.out_specs, "out"))
+        elif isinstance(self.out_specs, (ast.List, ast.Tuple)):
+            for el in self.out_specs.elts:
+                if isinstance(el, ast.Call):
+                    out.append((el, "out"))
+        return out
+
+    @property
+    def n_in(self) -> int | None:
+        if isinstance(self.in_specs, (ast.List, ast.Tuple)):
+            return len(self.in_specs.elts)
+        return None
+
+    @property
+    def n_out(self) -> int:
+        if isinstance(self.out_specs, (ast.List, ast.Tuple)):
+            return len(self.out_specs.elts)
+        return 1
+
+
+def find_sites(info: ModuleInfo) -> list[PallasSite]:
+    sites = []
+    for node in ast.walk(info.tree):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func, info.aliases) or ""
+            if d.endswith("pallas_call"):
+                sites.append(PallasSite(info, node))
+    return sites
+
+
+def _block_shape(spec_call: ast.Call) -> ast.Tuple | None:
+    if spec_call.args and isinstance(spec_call.args[0], ast.Tuple):
+        return spec_call.args[0]
+    for k in spec_call.keywords:
+        if k.arg == "block_shape" and isinstance(k.value, ast.Tuple):
+            return k.value
+    return None
+
+
+def _index_map(spec_call: ast.Call) -> ast.Lambda | None:
+    for node in list(spec_call.args) + [k.value for k in spec_call.keywords]:
+        if isinstance(node, ast.Lambda):
+            return node
+    return None
+
+
+@register("PC201", SCOPE_ALL,
+          "BlockSpec index map arity must equal len(grid) plus the number "
+          "of scalar-prefetch operands")
+def check_index_map_arity(tree, src, path):
+    info = ModuleInfo(tree)
+    for site in find_sites(info):
+        want = site.grid_len
+        if want is None:
+            continue
+        want += site.num_prefetch
+        for spec, kind in site.block_specs():
+            lam = _index_map(spec)
+            if lam is None:
+                continue
+            got = len(lam.args.args)
+            if got != want:
+                yield Finding(
+                    "PC201", path, spec.lineno,
+                    f"{kind}-spec index map takes {got} args, grid+prefetch "
+                    f"needs {want}")
+
+
+@register("PC202", SCOPE_ALL,
+          "index maps must return one element per block dim, each a "
+          "constant, grid variable, or prefetch lookup")
+def check_index_map_form(tree, src, path):
+    info = ModuleInfo(tree)
+    for site in find_sites(info):
+        for spec, kind in site.block_specs():
+            lam = _index_map(spec)
+            if lam is None:
+                continue
+            params = {a.arg for a in lam.args.args}
+            body = lam.body
+            elements = body.elts if isinstance(body, ast.Tuple) else [body]
+            shape = _block_shape(spec)
+            if (shape is not None and isinstance(body, ast.Tuple)
+                    and len(elements) != len(shape.elts)):
+                yield Finding(
+                    "PC202", path, spec.lineno,
+                    f"{kind}-spec index map returns {len(elements)} "
+                    f"indices for a rank-{len(shape.elts)} block")
+                continue
+            for el in elements:
+                ok = (isinstance(el, ast.Constant)
+                      or (isinstance(el, ast.Name) and el.id in params)
+                      or (isinstance(el, ast.Subscript)
+                          and isinstance(el.value, ast.Name)
+                          and el.value.id in params))
+                if not ok:
+                    yield Finding(
+                        "PC202", path, spec.lineno,
+                        f"{kind}-spec index map element "
+                        f"{ast.unparse(el)!r} is not a constant, grid "
+                        "variable, or prefetch lookup")
+
+
+@register("PC203", SCOPE_ALL,
+          "kernel signature, spec counts, operand counts, and out_shape "
+          "rank must agree")
+def check_kernel_signature(tree, src, path):
+    info = ModuleInfo(tree)
+    fn_by_name = {f.name: f for f in info.functions}
+    for site in find_sites(info):
+        n_in = site.n_in
+        if n_in is None:
+            continue
+        want_refs = site.num_prefetch + n_in + site.n_out
+        kernel = fn_by_name.get(site.kernel_name or "")
+        if kernel is not None:
+            got = len(kernel.args.args)
+            if got != want_refs:
+                yield Finding(
+                    "PC203", path, site.line,
+                    f"kernel {site.kernel_name!r} takes {got} refs; "
+                    f"prefetch({site.num_prefetch}) + in({n_in}) + "
+                    f"out({site.n_out}) = {want_refs}")
+        if site.operands is not None:
+            want_ops = site.num_prefetch + n_in
+            if len(site.operands) != want_ops:
+                yield Finding(
+                    "PC203", path, site.line,
+                    f"call passes {len(site.operands)} operands; specs "
+                    f"declare {want_ops}")
+        # out_shape rank vs out-spec block rank
+        if (isinstance(site.out_shape, ast.Call)
+                and site.out_shape.args
+                and isinstance(site.out_shape.args[0], ast.Tuple)
+                and isinstance(site.out_specs, ast.Call)):
+            shape_rank = len(site.out_shape.args[0].elts)
+            block = _block_shape(site.out_specs)
+            if block is not None and len(block.elts) != shape_rank:
+                yield Finding(
+                    "PC203", path, site.line,
+                    f"out_shape rank {shape_rank} != out-spec block rank "
+                    f"{len(block.elts)}")
+
+
+def _floordiv_bindings(fn: ast.FunctionDef) -> dict[str, tuple[str, str]]:
+    """Names bound as ``name = X // t`` (Names only) in ``fn``."""
+    out: dict[str, tuple[str, str]] = {}
+
+    def bind(target, value):
+        if (isinstance(target, ast.Name) and isinstance(value, ast.BinOp)
+                and isinstance(value.op, ast.FloorDiv)
+                and isinstance(value.left, ast.Name)
+                and isinstance(value.right, ast.Name)):
+            out[target.id] = (value.left.id, value.right.id)
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Tuple)
+                        and isinstance(node.value, ast.Tuple)
+                        and len(tgt.elts) == len(node.value.elts)):
+                    for t, v in zip(tgt.elts, node.value.elts):
+                        bind(t, v)
+                else:
+                    bind(tgt, node.value)
+    return out
+
+
+def _has_mod_guard(fn: ast.FunctionDef, num: str, den: str) -> bool:
+    """True if ``fn`` asserts (or branches on) ``num % den == 0``."""
+    for node in ast.walk(fn):
+        if not isinstance(node, (ast.Assert, ast.If)):
+            continue
+        for sub in ast.walk(node.test):
+            if (isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod)
+                    and isinstance(sub.left, ast.Name) and sub.left.id == num
+                    and isinstance(sub.right, ast.Name)
+                    and sub.right.id == den):
+                return True
+    return False
+
+
+@register("PC204", SCOPE_ALL,
+          "a grid extent of X // t needs an `assert X % t == 0` guard in "
+          "the same function — non-divisible shapes silently drop a tile")
+def check_tile_divisibility(tree, src, path):
+    info = ModuleInfo(tree)
+    for site in find_sites(info):
+        if not isinstance(site.grid, ast.Tuple) or site.enclosing is None:
+            continue
+        bindings = _floordiv_bindings(site.enclosing)
+        for el in site.grid.elts:
+            if isinstance(el, ast.Name) and el.id in bindings:
+                num, den = bindings[el.id]
+                if not _has_mod_guard(site.enclosing, num, den):
+                    yield Finding(
+                        "PC204", path, site.line,
+                        f"grid extent {el.id} = {num} // {den} without an "
+                        f"`assert {num} % {den} == 0` guard")
+
+
+# ---------------------------------------------------------------------------
+# PC205: cross-file interpret-twin coverage (driven from the CLI).
+# ---------------------------------------------------------------------------
+
+
+def kernel_wrappers(src_paths) -> list[tuple[str, str, int]]:
+    """(wrapper_name, path, line) for every function containing a
+    pallas_call in ``src_paths``."""
+    out = []
+    for path in walk_python_files(src_paths):
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                source = fh.read()
+            tree = ast.parse(source, filename=path)
+        except (OSError, SyntaxError):
+            continue
+        info = ModuleInfo(tree)
+        seen = set()
+        for site in find_sites(info):
+            fn = site.enclosing
+            if fn is not None and fn.name not in seen:
+                seen.add(fn.name)
+                out.append((fn.name, path, fn.lineno))
+    return out
+
+
+def coverage_findings(src_paths, test_paths) -> list[Finding]:
+    """PC205: kernel wrappers never referenced from the test suite."""
+    wrappers = kernel_wrappers(src_paths)
+    test_blob = []
+    for path in walk_python_files(test_paths):
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                test_blob.append(fh.read())
+        except OSError:
+            continue
+    blob = "\n".join(test_blob)
+    findings = []
+    for name, path, line in wrappers:
+        if not re.search(rf"\b{re.escape(name)}\b", blob):
+            findings.append(Finding(
+                "PC205", path, line,
+                f"kernel wrapper {name!r} has no interpret-mode "
+                "reference-twin test"))
+    return findings
+
+
+def coverage_report(src_paths, test_paths) -> dict:
+    """Machine-readable coverage map (consumed by the twin-test suite)."""
+    wrappers = kernel_wrappers(src_paths)
+    missing = {f.message.split("'")[1] for f in
+               coverage_findings(src_paths, test_paths)}
+    return {
+        "kernel_wrappers": [
+            {"name": n, "path": p, "line": ln, "covered": n not in missing}
+            for n, p, ln in wrappers],
+        "missing": sorted(missing),
+    }

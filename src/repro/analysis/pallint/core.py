@@ -1,0 +1,198 @@
+"""pallint core: findings, the rule registry, suppressions, and the driver.
+
+pallint enforces the *hot-path doctrine* this codebase was built around
+(DESIGN.md Sec 10): the steady-state query loop must stay device-resident —
+no per-batch host syncs, no silent recompiles, no un-donated steady-state
+buffers, no host↔device metadata bounces.  The paper's central claim
+(broadcast beats subtree partitioning because communication never dominates)
+dies by a thousand cuts otherwise, and PrIM-style benchmarking shows such
+regressions are exactly the kind that go unnoticed.
+
+Three rule families share this driver:
+
+* ``PL1xx`` — AST doctrine rules over every Python file (rules.py).
+* ``PC2xx`` — Pallas contract rules over every ``pl.pallas_call`` site
+  (contracts.py).
+* ``GR3xx`` — runtime guard violations (guards.py); surfaced through the
+  same Finding type so the CLI/pytest plumbing is uniform.
+
+Suppression: a line comment ``# pallint: disable=PL102`` (comma-separated
+IDs, or ``disable=all``) suppresses findings reported *on that line*.  A
+suppression at the top of a file (before any code, i.e. attached to line 1
+via a module-level comment ``# pallint-file: disable=...``) suppresses for
+the whole file.  Suppressions are the sanctioned-exception mechanism — e.g.
+the single end-of-set sync in ``engine.stream_batches``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Callable, Iterable, Sequence
+
+SUPPRESS_LINE_RE = re.compile(r"#\s*pallint:\s*disable=([A-Za-z0-9,_ ]+|all)")
+SUPPRESS_FILE_RE = re.compile(r"#\s*pallint-file:\s*disable=([A-Za-z0-9,_ ]+|all)")
+
+# Rule scopes: which part of the tree a rule patrols.  "src" rules guard
+# library code only (tests and benchmarks legitimately sync, time, and
+# catch broadly); "all" rules apply everywhere pallint walks.
+SCOPE_SRC = "src"
+SCOPE_ALL = "all"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One doctrine violation: rule ID, location, and a human message."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A registered rule: ID, scope, one-line doctrine, and a checker.
+
+    ``check(tree, src, path)`` yields Findings; suppression filtering is the
+    driver's job, not the rule's.
+    """
+
+    rule_id: str
+    scope: str
+    doctrine: str
+    check: Callable[[ast.AST, str, str], Iterable[Finding]]
+
+
+_REGISTRY: dict[str, Rule] = {}
+
+
+def register(rule_id: str, scope: str, doctrine: str):
+    """Decorator registering ``fn(tree, src, path) -> Iterable[Finding]``."""
+
+    def deco(fn):
+        if rule_id in _REGISTRY:
+            raise ValueError(f"duplicate pallint rule {rule_id}")
+        _REGISTRY[rule_id] = Rule(rule_id, scope, doctrine, fn)
+        return fn
+
+    return deco
+
+
+def registry() -> dict[str, Rule]:
+    """All registered rules (importing the rule modules as a side effect)."""
+    from repro.analysis.pallint import contracts, rules  # noqa: F401
+
+    return dict(_REGISTRY)
+
+
+def _suppressed(src: str) -> tuple[set[str] | None, dict[int, set[str] | None]]:
+    """Parse suppression comments.
+
+    Returns ``(file_level, per_line)`` where each value is a set of rule IDs
+    or ``None`` meaning *all rules*.
+    """
+    file_level: set[str] | None = set()
+    per_line: dict[int, set[str] | None] = {}
+    for lineno, line in enumerate(src.splitlines(), start=1):
+        m = SUPPRESS_FILE_RE.search(line)
+        if m:
+            ids = m.group(1).strip()
+            if ids == "all":
+                file_level = None
+            elif file_level is not None:
+                file_level |= {s.strip() for s in ids.split(",") if s.strip()}
+        m = SUPPRESS_LINE_RE.search(line)
+        if m:
+            ids = m.group(1).strip()
+            if ids == "all":
+                per_line[lineno] = None
+            else:
+                cur = per_line.setdefault(lineno, set())
+                if cur is not None:
+                    cur |= {s.strip() for s in ids.split(",") if s.strip()}
+    return (file_level if file_level else set()), per_line
+
+
+def _is_suppressed(f: Finding, file_level, per_line) -> bool:
+    if file_level is None or f.rule in (file_level or ()):
+        return True
+    if f.line in per_line:
+        ids = per_line[f.line]
+        return ids is None or f.rule in ids
+    return False
+
+
+def _in_src_scope(path: str) -> bool:
+    parts = os.path.normpath(path).split(os.sep)
+    return "src" in parts or ("repro" in parts and "tests" not in parts
+                              and "benchmarks" not in parts)
+
+
+def lint_file(path: str, rules: dict[str, Rule] | None = None,
+              src: str | None = None) -> list[Finding]:
+    """Lint one file; returns unsuppressed findings sorted by line."""
+    rules = rules if rules is not None else registry()
+    if src is None:
+        with open(path, "r", encoding="utf-8") as fh:
+            src = fh.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding("PL000", path, e.lineno or 1,
+                        f"syntax error: {e.msg}")]
+    file_level, per_line = _suppressed(src)
+    in_src = _in_src_scope(path)
+    out: list[Finding] = []
+    for rule in rules.values():
+        if rule.scope == SCOPE_SRC and not in_src:
+            continue
+        for f in rule.check(tree, src, path):
+            if not _is_suppressed(f, file_level, per_line):
+                out.append(f)
+    return sorted(out, key=lambda f: (f.line, f.rule))
+
+
+def walk_python_files(paths: Sequence[str]) -> list[str]:
+    out = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git", ".pytest_cache")]
+                out.extend(os.path.join(root, f)
+                           for f in files if f.endswith(".py"))
+    return sorted(out)
+
+
+def lint_paths(paths: Sequence[str]) -> list[Finding]:
+    rules = registry()
+    findings: list[Finding] = []
+    for path in walk_python_files(paths):
+        findings.extend(lint_file(path, rules))
+    return findings
+
+
+def render_human(findings: Sequence[Finding], rules: dict[str, Rule]) -> str:
+    lines = [f.format() for f in findings]
+    seen = sorted({f.rule for f in findings})
+    for rid in seen:
+        if rid in rules:
+            lines.append(f"  {rid}: {rules[rid].doctrine}")
+    lines.append(f"pallint: {len(findings)} finding(s)")
+    return "\n".join(lines)
+
+
+def render_json(findings: Sequence[Finding]) -> str:
+    return json.dumps({"findings": [f.to_json() for f in findings],
+                       "count": len(findings)}, indent=2)

@@ -1,0 +1,203 @@
+"""pallint runtime trace guards (GR3xx): the dynamic half of the doctrine.
+
+Static rules can't prove that a jitted entrypoint stays compiled-once and
+device-resident at runtime — shape drift recompiles silently, and a stray
+``np.asarray`` on a device value syncs the pipeline without any syntactic
+tell at the call site.  This harness wraps steady-state execution in:
+
+* ``jax.transfer_guard_device_to_host("disallow")`` — any *implicit*
+  device→host transfer raises.  Explicit retrieval (``jax.device_get``) at
+  the sanctioned end-of-set sync stays legal, which is exactly the doctrine:
+  results leave the device once, on purpose, never as a side effect.
+* compilation-count freezing — ``PjitFunction._cache_size()`` (or any
+  user-supplied counter, e.g. an engine's ``trace_count``) is snapshotted
+  before the steady-state region and must not grow.
+
+Violations raise :class:`GuardViolation` carrying GR301 (recompile) or
+GR302 (implicit transfer).  Exposed as a pytest fixture
+(:mod:`repro.analysis.pallint.pytest_plugin`) and as the CLI self-check
+(``python -m repro.analysis.pallint --guards``), which drives the public
+jitted entrypoints — broadcast engine step, subtree engine step, and the
+serve-loop decode step — through warmup + guarded steady state.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+import jax
+
+from repro.analysis.pallint.core import Finding
+
+
+class GuardViolation(AssertionError):
+    """A hot-path doctrine violation observed at runtime."""
+
+    def __init__(self, findings: list[Finding]):
+        self.findings = findings
+        super().__init__("\n".join(f.format() for f in findings))
+
+
+def compile_count(fn) -> int | None:
+    """Number of compiled specializations cached on a jitted callable."""
+    cache_size = getattr(fn, "_cache_size", None)
+    if callable(cache_size):
+        return int(cache_size())
+    return None
+
+
+def _snapshot(counters: dict[str, Callable[[], int | None]]):
+    return {name: get() for name, get in counters.items()}
+
+
+def _normalize(entrypoints, counters):
+    """Build name → count-getter from jitted fns and/or explicit counters."""
+    out: dict[str, Callable[[], int | None]] = {}
+    for name, fn in (entrypoints or {}).items():
+        out[name] = (lambda f=fn: compile_count(f))
+    for name, get in (counters or {}).items():
+        out[name] = get
+    return out
+
+
+@contextlib.contextmanager
+def steady_state(entrypoints: dict[str, object] | None = None,
+                 counters: dict[str, Callable[[], int | None]] | None = None,
+                 *, transfers: bool = True, where: str = "steady-state"):
+    """Guard a steady-state region: no recompiles, no implicit D2H.
+
+    ``entrypoints`` maps names to jitted callables (compile counts read via
+    ``_cache_size``); ``counters`` maps names to explicit count getters
+    (e.g. ``lambda: engine.trace_count``).  Entrypoints must be *warm* —
+    call them once before entering the guard.
+    """
+    watch = _normalize(entrypoints, counters)
+    before = _snapshot(watch)
+    ctx = (jax.transfer_guard_device_to_host("disallow") if transfers
+           else contextlib.nullcontext())
+    try:
+        with ctx:
+            yield
+    except Exception as e:  # re-badge jax's transfer error with the rule ID
+        if "transfer" in str(e).lower() and "disallow" in str(e).lower():
+            raise GuardViolation([Finding(
+                "GR302", where, 0,
+                f"implicit device->host transfer in steady state: {e}")]
+            ) from e
+        raise
+    after = _snapshot(watch)
+    grew = [
+        Finding("GR301", where, 0,
+                f"{name!r} recompiled in steady state "
+                f"({before[name]} -> {after[name]} specializations)")
+        for name in watch
+        if before[name] is not None and after[name] is not None
+        and after[name] > before[name]
+    ]
+    if grew:
+        raise GuardViolation(grew)
+
+
+# ---------------------------------------------------------------------------
+# CLI self-check: drive each public jitted entrypoint through warmup and a
+# guarded steady-state run on tiny synthetic workloads.
+# ---------------------------------------------------------------------------
+
+
+def _check_broadcast_engine() -> list[Finding]:
+    import numpy as np
+    from repro import compat
+    from repro.core import engine as beng
+    from repro.core import rtree
+    from repro.data import datasets, spider
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    rects = spider.uniform(2000, seed=101, max_size=0.02)
+    queries = datasets.make_queries(rects, 0.2, seed=102)
+    tree = rtree.build_str_3level(rects, leaf_capacity=32, fanout=8)
+    eng = beng.BroadcastEngine(tree, mesh, batch_size=64)
+    eng.query(queries[:64])                        # warmup
+    try:
+        with steady_state(entrypoints={"broadcast_step": eng._step},
+                          counters={"broadcast_trace":
+                                    lambda: eng.trace_count},
+                          where="BroadcastEngine.query"):
+            eng.query(queries)
+    except GuardViolation as e:
+        return e.findings
+    return []
+
+
+def _check_subtree_engine() -> list[Finding]:
+    from repro import compat
+    from repro.core import subtree
+    from repro.data import datasets, spider
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    rects = spider.gaussian(1500, seed=103, max_size=0.02)
+    queries = datasets.make_queries(rects, 0.2, seed=104)
+    eng = subtree.SubtreeEngine(rects, mesh, leaf_capacity=64, batch_size=64)
+    eng.query(queries[:64])                        # warmup
+    try:
+        with steady_state(entrypoints={"subtree_step": eng._step},
+                          counters={"subtree_trace":
+                                    lambda: eng.trace_count},
+                          where="SubtreeEngine.query"):
+            eng.query(queries)
+    except GuardViolation as e:
+        return e.findings
+    return []
+
+
+def _check_serve_decode_step() -> list[Finding]:
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import compat, configs
+    from repro.models import api
+    from repro.serve import serve_loop
+
+    cfg = configs.get_config("llama3.2-1b", smoke=True)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    bs, seq = 2, 16
+    step, _, st_shapes, _ = serve_loop.make_decode_step(cfg, mesh, bs, seq,
+                                                        dtype=jnp.float32)
+    params = api.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    state = api.init_decode_state(cfg, bs, seq, dtype=jnp.float32)
+    # Place the cache on its steady-state shardings up front — feeding the
+    # uncommitted init state would cost one extra (warmup-only)
+    # specialization once the donated output comes back committed.
+    state = jax.device_put(state,
+                           serve_loop.state_shardings(cfg, mesh, st_shapes))
+    rng = np.random.default_rng(105)
+
+    def batch(pos):
+        return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (bs, 1)),
+                                      jnp.int32),
+                "pos": jnp.asarray(pos, jnp.int32)}
+
+    _, state = step(params, state, batch(0))        # warmup
+    try:
+        with steady_state(entrypoints={"decode_step": step},
+                          where="serve_loop.decode_step"):
+            for pos in range(1, 4):
+                _, state = step(params, state, batch(pos))
+    except GuardViolation as e:
+        return e.findings
+    return []
+
+
+ENTRYPOINT_CHECKS: dict[str, Callable[[], list[Finding]]] = {
+    "broadcast_engine": _check_broadcast_engine,
+    "subtree_engine": _check_subtree_engine,
+    "serve_decode_step": _check_serve_decode_step,
+}
+
+
+def run_entrypoint_checks(names=None) -> list[Finding]:
+    """Run the guard self-check over the public jitted entrypoints."""
+    findings: list[Finding] = []
+    for name, check in ENTRYPOINT_CHECKS.items():
+        if names is not None and name not in names:
+            continue
+        findings.extend(check())
+    return findings

@@ -1,0 +1,34 @@
+"""pytest plugin: the shared steady-state trace-guard fixture.
+
+Registered from the repo-root ``conftest.py`` so every tier-1 test can
+assert the hot-path doctrine at runtime without rolling its own
+trace-count bookkeeping:
+
+    def test_engine_steady_state(pallint_steady_state):
+        eng = BroadcastEngine(...)
+        eng.query(warmup)                    # compile once
+        with pallint_steady_state(entrypoints={"step": eng._step},
+                                  counters={"trace": lambda: eng.trace_count}):
+            eng.query(queries)               # must not retrace or sync
+
+Inside the ``with`` block, any implicit device→host transfer and any growth
+of a watched compile counter raises :class:`GuardViolation` (GR301/GR302),
+failing the test with the rule ID and the offending entrypoint name.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis.pallint import guards
+
+
+@pytest.fixture
+def pallint_steady_state():
+    """Factory fixture: the :func:`guards.steady_state` context manager."""
+    return guards.steady_state
+
+
+@pytest.fixture
+def pallint_compile_count():
+    """Read a jitted callable's compile-cache size (None if unsupported)."""
+    return guards.compile_count

@@ -1,0 +1,342 @@
+"""pallint AST rules (PL1xx): the hot-path doctrine, machine-checked.
+
+Rule catalog (DESIGN.md Sec 10):
+
+PL101 host-sync-in-jit        no ``np.asarray``/``np.array``/``.item()``/
+                              ``float()``/``jax.device_get``/
+                              ``block_until_ready`` inside jit-compiled or
+                              kernel-adjacent functions.
+PL102 stray-host-sync         ``block_until_ready`` in library code outside
+                              the sanctioned end-of-set sync (inline
+                              suppression marks the sanctioned site).
+PL103 python-loop-over-device Python ``for`` loops iterating a device array.
+PL104 undeclared-donation     jitted steady-state step builders
+                              (``make_*step``) must *declare*
+                              ``donate_argnums`` — an explicit ``()`` is an
+                              audited opt-out, absence is a doctrine hole.
+PL105 dynamic-shape-hazard    ``jnp`` array constructors whose shape/size
+                              arguments are freshly unboxed Python scalars
+                              (``int()``/``float()``/``.item()``) — every
+                              distinct value recompiles the trace.
+PL106 mutable-default-arg     mutable default arguments in library code.
+PL107 bare-except             bare ``except:`` in library code.
+PL108 device-host-bounce      ``np.asarray(...)`` over an expression that
+                              itself builds a device array (``jnp.*``) — a
+                              host→device→host round trip.
+PL109 int64-index-dtype       explicit ``int64`` dtypes in library code;
+                              coordinates and indices are int32 by doctrine
+                              (32-bit index-dtype consistency; suppress for
+                              genuine 64-bit payloads such as byte counters).
+
+Detection of "jit-compiled or kernel-adjacent" (PL101): a function is a jit
+context if (a) a decorator references ``jit``, (b) its name is passed as the
+first positional argument to ``jax.jit`` / ``shard_map`` / ``pallas_call``
+anywhere in the module, (c) its name ends in ``_kernel``, or (d) it is
+nested inside a jit context (e.g. ``@pl.when`` bodies inside a kernel).
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.pallint.core import (
+    SCOPE_ALL, SCOPE_SRC, Finding, register)
+
+STEP_BUILDER_RE = re.compile(r"^make_\w*step$")
+
+_JNP_CONSTRUCTORS = {
+    "zeros", "ones", "full", "empty", "arange", "linspace", "eye",
+    "tile", "broadcast_to", "reshape", "iota",
+}
+
+
+def resolve_aliases(tree: ast.AST) -> dict[str, str]:
+    """Map imported names to canonical dotted module paths.
+
+    ``import jax.numpy as jnp`` → ``{"jnp": "jax.numpy"}``;
+    ``from jax.experimental import pallas as pl`` →
+    ``{"pl": "jax.experimental.pallas"}``; ``import jax`` → ``{"jax": "jax"}``.
+    """
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted(node: ast.AST, aliases: dict[str, str]) -> str | None:
+    """Canonical dotted path of a Name/Attribute chain, alias-resolved."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(aliases.get(node.id, node.id))
+    return ".".join(reversed(parts))
+
+
+def _first_positional_name(call: ast.Call) -> str | None:
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    return None
+
+
+class ModuleInfo:
+    """Shared per-module analysis: aliases, function table, jit contexts."""
+
+    def __init__(self, tree: ast.AST):
+        self.tree = tree
+        self.aliases = resolve_aliases(tree)
+        self.functions: list[ast.FunctionDef] = [
+            n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        self._parents: dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        self.jit_context_fns = self._find_jit_contexts()
+
+    def parent_chain(self, node: ast.AST):
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def enclosing_function(self, node: ast.AST) -> ast.FunctionDef | None:
+        for p in self.parent_chain(node):
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return p
+        return None
+
+    def _decorated_jit(self, fn: ast.FunctionDef) -> bool:
+        for dec in fn.decorator_list:
+            for sub in ast.walk(dec):
+                d = dotted(sub, self.aliases)
+                if d and (d.endswith(".jit") or d == "jit"):
+                    return True
+        return False
+
+    def _find_jit_contexts(self) -> set[ast.FunctionDef]:
+        # names handed to jit/shard_map/pallas_call as the traced callable
+        traced_names: set[str] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                d = dotted(node.func, self.aliases) or ""
+                if (d.endswith(".jit") or d == "jit"
+                        or d.endswith("shard_map")
+                        or d.endswith("pallas_call")):
+                    name = _first_positional_name(node)
+                    if name:
+                        traced_names.add(name)
+        ctx: set[ast.FunctionDef] = set()
+        for fn in self.functions:
+            if (self._decorated_jit(fn) or fn.name in traced_names
+                    or fn.name.endswith("_kernel")):
+                ctx.add(fn)
+        # nested defs inherit their enclosing jit context
+        changed = True
+        while changed:
+            changed = False
+            for fn in self.functions:
+                if fn in ctx:
+                    continue
+                enc = self.enclosing_function(fn)
+                if enc is not None and enc in ctx:
+                    ctx.add(fn)
+                    changed = True
+        return ctx
+
+    def in_jit_context(self, node: ast.AST) -> bool:
+        fn = self.enclosing_function(node)
+        return fn is not None and fn in self.jit_context_fns
+
+    def contains_jnp(self, node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            d = dotted(sub, self.aliases)
+            if d and (d.startswith("jax.numpy") or d.startswith("jax.lax")):
+                return True
+        return False
+
+
+_HOST_SYNC_FUNCS = {"numpy.asarray", "numpy.array", "jax.device_get"}
+
+
+@register("PL101", SCOPE_ALL,
+          "host sync / host materialization inside a jit-compiled or "
+          "kernel-adjacent function breaks the device-resident hot path")
+def check_host_sync_in_jit(tree, src, path):
+    info = ModuleInfo(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not info.in_jit_context(node):
+            continue
+        d = dotted(node.func, info.aliases)
+        msg = None
+        if d in _HOST_SYNC_FUNCS:
+            msg = f"call to {d.replace('numpy', 'np')} in jit context"
+        elif d == "float" and node.args and not isinstance(
+                node.args[0], ast.Constant):
+            msg = "float() unboxing in jit context"
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr in ("item", "block_until_ready")):
+            msg = f".{node.func.attr}() host sync in jit context"
+        if msg:
+            yield Finding("PL101", path, node.lineno, msg)
+
+
+@register("PL102", SCOPE_SRC,
+          "block_until_ready in library code — the hot path allows exactly "
+          "one sanctioned end-of-set sync (inline-suppressed at its site)")
+def check_stray_host_sync(tree, src, path):
+    info = ModuleInfo(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        is_bur = (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "block_until_ready")
+        if is_bur and not info.in_jit_context(node):
+            yield Finding("PL102", path, node.lineno,
+                          "block_until_ready outside the sanctioned sync")
+
+
+@register("PL103", SCOPE_ALL,
+          "Python for-loop over a device array executes one dispatch per "
+          "element — use vectorized ops or lax control flow")
+def check_loop_over_device_array(tree, src, path):
+    info = ModuleInfo(tree)
+    # names bound (anywhere in the module) from a jnp-producing expression
+    jnp_names: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and info.contains_jnp(node.value):
+            for tgt in node.targets:
+                for sub in ast.walk(tgt):
+                    if isinstance(sub, ast.Name):
+                        jnp_names.add(sub.id)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.For):
+            continue
+        it = node.iter
+        if isinstance(it, ast.Call) and info.contains_jnp(it.func):
+            yield Finding("PL103", path, node.lineno,
+                          "for-loop over a jnp call result")
+        elif isinstance(it, ast.Name) and it.id in jnp_names:
+            yield Finding("PL103", path, node.lineno,
+                          f"for-loop over device array {it.id!r}")
+
+
+@register("PL104", SCOPE_SRC,
+          "steady-state jitted step builders must declare donate_argnums "
+          "(an explicit empty tuple is an audited opt-out)")
+def check_undeclared_donation(tree, src, path):
+    info = ModuleInfo(tree)
+    for fn in info.functions:
+        if not STEP_BUILDER_RE.match(fn.name):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func, info.aliases) or ""
+            if not (d.endswith(".jit") or d == "jit"):
+                continue
+            kw = {k.arg for k in node.keywords}
+            if "donate_argnums" not in kw and "donate_argnames" not in kw:
+                yield Finding(
+                    "PL104", path, node.lineno,
+                    f"jax.jit in step builder {fn.name!r} without a "
+                    "donate_argnums declaration")
+
+
+def _unboxing_calls(node: ast.AST, aliases) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            if isinstance(sub.func, ast.Name) and sub.func.id in (
+                    "int", "float"):
+                if sub.args and not isinstance(sub.args[0], ast.Constant):
+                    return True
+            elif (isinstance(sub.func, ast.Attribute)
+                  and sub.func.attr == "item"):
+                return True
+    return False
+
+
+@register("PL105", SCOPE_ALL,
+          "jnp constructor shaped by a freshly unboxed Python scalar — "
+          "every distinct value triggers a recompile")
+def check_dynamic_shape_hazard(tree, src, path):
+    info = ModuleInfo(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func, info.aliases) or ""
+        if not d.startswith("jax.numpy."):
+            continue
+        if d.rsplit(".", 1)[-1] not in _JNP_CONSTRUCTORS:
+            continue
+        for arg in list(node.args) + [k.value for k in node.keywords
+                                      if k.arg in (None, "shape")]:
+            if _unboxing_calls(arg, info.aliases):
+                yield Finding(
+                    "PL105", path, node.lineno,
+                    f"{d.replace('jax.numpy', 'jnp')} shaped by "
+                    "int()/float()/.item() — recompilation hazard")
+                break
+
+
+@register("PL106", SCOPE_SRC,
+          "mutable default argument — shared across calls")
+def check_mutable_default(tree, src, path):
+    info = ModuleInfo(tree)
+    for fn in info.functions:
+        for default in list(fn.args.defaults) + [
+                d for d in fn.args.kw_defaults if d is not None]:
+            bad = isinstance(default, (ast.List, ast.Dict, ast.Set))
+            if isinstance(default, ast.Call):
+                d = dotted(default.func, info.aliases) or ""
+                bad = d in ("list", "dict", "set") or d.endswith(
+                    (".array", ".zeros", ".ones", ".empty"))
+            if bad:
+                yield Finding("PL106", path, default.lineno,
+                              f"mutable default in {fn.name!r}")
+
+
+@register("PL107", SCOPE_SRC,
+          "bare except swallows every error including guard violations")
+def check_bare_except(tree, src, path):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ExceptHandler) and node.type is None:
+            yield Finding("PL107", path, node.lineno, "bare except:")
+
+
+@register("PL108", SCOPE_SRC,
+          "np.asarray over a jnp-built value is a host→device→host bounce — "
+          "compute on one side of the boundary")
+def check_device_host_bounce(tree, src, path):
+    info = ModuleInfo(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func, info.aliases)
+        if d not in ("numpy.asarray", "numpy.array"):
+            continue
+        if any(info.contains_jnp(a) for a in node.args):
+            yield Finding("PL108", path, node.lineno,
+                          "np.asarray over a jnp expression (device→host "
+                          "bounce)")
+
+
+@register("PL109", SCOPE_SRC,
+          "explicit int64 dtype in library code — indices and coordinates "
+          "are int32 by doctrine (suppress for true 64-bit payloads)")
+def check_int64_index_dtype(tree, src, path):
+    info = ModuleInfo(tree)
+    for node in ast.walk(tree):
+        d = dotted(node, info.aliases)
+        if d in ("numpy.int64", "jax.numpy.int64"):
+            yield Finding("PL109", path, node.lineno,
+                          f"explicit {d.split('.')[0]}.int64 dtype")

@@ -126,13 +126,17 @@ def shard_tree(
         valid = tiles[..., 0] <= tiles[..., 2]
         tile_occupancy = valid.sum(axis=2).astype(np.int32)
     flat = per_dev.reshape(-1, 4)
+    assert tree.l1_child_start.dtype == np.int32, tree.l1_child_start.dtype
+    assert tree.l1_child_count.dtype == np.int32, tree.l1_child_count.dtype
 
-    starts = np.asarray(tree.l1_child_start, dtype=np.int64)
-    counts = np.asarray(tree.l1_child_count, dtype=np.int64)
+    # 32-bit index-dtype doctrine (pallint PL109): child ranges are leaf
+    # indices and stay int32 end to end.
+    starts = np.asarray(tree.l1_child_start, dtype=np.int32)
+    counts = np.asarray(tree.l1_child_count, dtype=np.int32)
     ends = starts + counts
     l1_mbrs = np.asarray(tree.l1_mbrs)
     # level-1 nodes whose child leaf range intersects each device slice
-    dev_lo = np.arange(d, dtype=np.int64)[:, None] * lp
+    dev_lo = np.arange(d, dtype=np.int32)[:, None] * lp
     dev_hi = np.minimum(dev_lo + lp, l)
     hits = (starts[None, :] < dev_hi) & (ends[None, :] > dev_lo)   # (D, C1)
     kmax = max(1, int(hits.sum(axis=1).max()))
@@ -215,8 +219,9 @@ def morton_order(rects: np.ndarray, shift: int = 12) -> np.ndarray:
     collapse into one Z-code bucket (the old code interleaved only 10 bits).
     """
     if rects.shape[0] == 0:
-        return np.empty(0, dtype=np.int64)
-    r = rects.astype(np.int64)
+        return np.empty(0, dtype=np.int32)
+    # 64-bit intermediate: centre sums overflow int32 on extreme coordinates
+    r = rects.astype(np.int64)    # pallint: disable=PL109
     cx = (r[:, 0] + r[:, 2]) // 2
     cy = (r[:, 1] + r[:, 3]) // 2
     cx = ((cx - cx.min()) >> shift).astype(np.uint64)
@@ -225,7 +230,8 @@ def morton_order(rects: np.ndarray, shift: int = 12) -> np.ndarray:
     for i in range(21):
         code |= ((cx >> np.uint64(i)) & np.uint64(1)) << np.uint64(2 * i)
         code |= ((cy >> np.uint64(i)) & np.uint64(1)) << np.uint64(2 * i + 1)
-    return np.argsort(code, kind="stable")
+    # permutation indices follow the 32-bit index doctrine (pallint PL109)
+    return np.argsort(code, kind="stable").astype(np.int32)
 
 
 def stream_batches(
@@ -268,8 +274,12 @@ def stream_batches(
                    if i + 1 < nb else None)
             outs.append(step(*operands, staged))
             staged = nxt              # drop our reference to the donated buffer
-    jax.block_until_ready(outs)           # single host sync for the whole set
-    return np.concatenate([np.asarray(o) for o in outs])[:q]
+    # The one sanctioned host sync of the hot path: a single end-of-set
+    # barrier plus an *explicit* device→host retrieval (jax.device_get), so
+    # the whole loop runs clean under the pallint trace guard's
+    # transfer_guard_device_to_host("disallow").
+    jax.block_until_ready(outs)    # pallint: disable=PL102
+    return np.concatenate(jax.device_get(outs))[:q]
 
 
 class BroadcastEngine:

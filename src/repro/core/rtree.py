@@ -39,7 +39,7 @@ def _validate_rects(rects: np.ndarray) -> np.ndarray:
 
 def _centers(rects: np.ndarray) -> np.ndarray:
     # Midpoints; int64 intermediate avoids overflow on extreme coordinates.
-    r = rects.astype(np.int64)
+    r = rects.astype(np.int64)    # pallint: disable=PL109
     return np.stack([(r[:, 0] + r[:, 2]) // 2, (r[:, 1] + r[:, 3]) // 2], axis=1)
 
 
@@ -58,7 +58,8 @@ def str_pack(rects: np.ndarray, capacity: int) -> np.ndarray:
 
     c = _centers(rects)
     by_x = np.argsort(c[:, 0], kind="stable")
-    order = np.empty(n, dtype=np.int64)
+    # permutation indices follow the 32-bit index doctrine (pallint PL109)
+    order = np.empty(n, dtype=np.int32)
     for s in range(num_slices):
         lo, hi = s * slice_rects, min((s + 1) * slice_rects, n)
         if lo >= hi:
@@ -135,7 +136,7 @@ def build_str_3level(
     leaf_mbrs = leaf_mbrs[l1_order]
 
     num_l1 = math.ceil(num_leaves / f)
-    l1_child_start = (np.arange(num_l1, dtype=np.int64) * f).astype(np.int32)
+    l1_child_start = (np.arange(num_l1, dtype=np.int32) * f).astype(np.int32)
     l1_child_count = np.minimum(f, num_leaves - l1_child_start).astype(
         np.int32)
     pad_l1 = num_l1 * f - num_leaves

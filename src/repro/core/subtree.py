@@ -74,7 +74,8 @@ def build_layout(
     d = num_devices
     out = np.tile(EMPTY_RECT, (d, rmax, 1))
     mbrs = np.tile(EMPTY_RECT, (d, 1))
-    sbytes = np.zeros(d, dtype=np.int64)
+    # byte counter, not an index — a true 64-bit payload
+    sbytes = np.zeros(d, dtype=np.int64)    # pallint: disable=PL109
     for i, r in enumerate(per_dev):
         out[i, : r.shape[0]] = r
         mbrs[i] = subs[i].mbr
@@ -82,6 +83,11 @@ def build_layout(
     rect_tile_mbrs = None
     if tile is not None:
         rect_tile_mbrs = mbr_of(out.reshape(d, rmax // tile, tile, 4))
+        # dtype-consistency contract (pallint PL109 doctrine): everything
+        # device-placed is int32 — coordinates, MBRs, and tile metadata.
+        assert rect_tile_mbrs.dtype == np.int32, rect_tile_mbrs.dtype
+    for r in per_dev:
+        assert r.dtype == np.int32, r.dtype
     return SubtreeLayout(
         rects=out.astype(np.int32),
         root_mbrs=mbrs.astype(np.int32),

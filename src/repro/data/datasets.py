@@ -63,7 +63,8 @@ def make_queries(
     n = rects.shape[0]
     q = max(1, int(round(n * fraction)))
     idx = rng.choice(n, size=q, replace=q > n)
-    base = rects[idx].astype(np.int64)
+    # 64-bit intermediate: expansion arithmetic may overflow int32 corners
+    base = rects[idx].astype(np.int64)    # pallint: disable=PL109
     grow = int(expand * spider.SCALE)
     g = rng.integers(0, max(grow, 1), size=(q, 2))
     out = np.stack(

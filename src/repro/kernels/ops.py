@@ -61,6 +61,25 @@ def pad_rects_to(rects: jnp.ndarray, multiple: int) -> jnp.ndarray:
     return jnp.concatenate([rects, jnp.tile(empty, (pad, 1))], axis=0)
 
 
+def pad_rects_to_np(rects: np.ndarray, multiple: int) -> np.ndarray:
+    """Host twin of :func:`pad_rects_to` — pure NumPy, no device bounce."""
+    n = rects.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return rects
+    empty = np.array([INT32_MAX, INT32_MAX, INT32_MIN, INT32_MIN],
+                     dtype=rects.dtype)
+    return np.concatenate([rects, np.tile(empty, (pad, 1))], axis=0)
+
+
+def tile_mbrs_np(rects: np.ndarray, tile: int) -> np.ndarray:
+    """Host twin of :func:`tile_mbrs` — pure NumPy, no device bounce."""
+    r = rects.reshape(-1, tile, 4)
+    return np.concatenate(
+        [r[..., :2].min(axis=1), r[..., 2:].max(axis=1)], axis=-1
+    )
+
+
 def tile_mbrs(rects: jnp.ndarray, tile: int) -> jnp.ndarray:
     """Per-tile MBRs of an (Np, 4) rect array, Np % tile == 0 → (Np/tile, 4).
 
@@ -94,6 +113,8 @@ def overlap_counts(
     if impl not in IMPLS:
         raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
     q = queries.shape[0]
+    if q == 0:        # empty batch: a zero-extent grid has no tile to load
+        return jnp.zeros((0,), jnp.int32)
     if mask is None:
         mask = jnp.ones((q,), jnp.int32)
     mask = mask.astype(jnp.int32)
@@ -144,6 +165,8 @@ def overlap_counts_fused(
     if impl not in IMPLS:
         raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
     q = queries.shape[0]
+    if q == 0:        # empty batch: a zero-extent grid has no tile to load
+        return jnp.zeros((0,), jnp.int32)
     if impl == "xla":
         mask = ref.rect_overlap(
             queries[:, None, :], cover_mbrs[None, :, :]).any(axis=1)
@@ -236,17 +259,20 @@ def overlap_counts_sparse_host(
     """Sparse (scalar-prefetch) path; tile lists built on host from MBRs.
 
     Kept as the pre-cache reference pipeline: every call re-derives all tile
-    metadata on the host and round-trips it — exactly the per-batch cost the
-    device-resident engine amortizes away (measured in benchmarks/regress.py).
+    metadata on the host — exactly the per-batch cost the device-resident
+    engine amortizes away (measured in benchmarks/regress.py).  The metadata
+    is built in pure NumPy and crosses to the device exactly once; the old
+    ``np.asarray(pad_rects_to(jnp.asarray(...)))`` host→device→host bounce
+    was pallint PL108's first catch.
     """
     q = queries.shape[0]
     if mask is None:
         mask = np.ones((q,), np.int32)
-    qp = np.asarray(pad_rects_to(jnp.asarray(queries), tq))
-    rp = np.asarray(pad_rects_to(jnp.asarray(rects), tr))
+    qp = pad_rects_to_np(np.asarray(queries, np.int32), tq)
+    rp = pad_rects_to_np(np.asarray(rects, np.int32), tr)
     maskp = np.pad(np.asarray(mask, np.int32), (0, qp.shape[0] - q))
-    qmbrs = np.asarray(tile_mbrs(jnp.asarray(qp), tq))
-    rmbrs = np.asarray(tile_mbrs(jnp.asarray(rp), tr))
+    qmbrs = tile_mbrs_np(qp, tq)
+    rmbrs = tile_mbrs_np(rp, tr)
     nactive, tile_ids = build_active_tiles(qmbrs, rmbrs)
     out = rk.overlap_counts_sparse(
         jnp.asarray(qp.T), jnp.asarray(rp.T), jnp.asarray(maskp),

@@ -261,6 +261,7 @@ def overlap_counts_sparse(
     interpret: bool = False,
 ) -> jnp.ndarray:
     qp, rp = q_coords.shape[1], r_coords.shape[1]
+    assert qp % tq == 0 and rp % tr == 0, (qp, tq, rp, tr)
     nq = qp // tq
     max_active = tile_ids.shape[1]
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -318,6 +319,7 @@ def overlap_counts_sparse_fused(
     interpret: bool = False,
 ) -> jnp.ndarray:
     qp, rp = q_coords.shape[1], r_coords.shape[1]
+    assert qp % tq == 0 and rp % tr == 0, (qp, tq, rp, tr)
     nq = qp // tq
     max_active = tile_ids.shape[1]
     k = cover_mbrs.shape[0]

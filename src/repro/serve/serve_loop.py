@@ -94,7 +94,10 @@ def make_prefill_step(cfg: ModelConfig, mesh: Mesh, batch_size: int,
         hidden = api.forward(cfg, params, batch, return_hidden=True)
         return api._head_logits(cfg, params, hidden[:, -1:])
 
-    fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+    # donate_argnums declared empty deliberately (pallint PL104): params are
+    # reused by the decode path and the int32 token batch can never alias
+    # the float logits, so there is nothing to donate here.
+    fn = jax.jit(step, in_shardings=(p_sh, b_sh), donate_argnums=())
     return fn, p_shapes, b_shapes
 
 

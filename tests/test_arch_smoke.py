@@ -96,6 +96,39 @@ def test_decode_matches_forward(arch):
     np.testing.assert_allclose(dec, full, rtol=2e-2, atol=2e-2)
 
 
+def test_serve_decode_steady_state_guarded(pallint_steady_state):
+    """The serving decode loop obeys the hot-path doctrine after warmup:
+    no recompiles, no implicit device->host transfers (pallint GR301/302).
+    The cache is placed on its steady shardings up front — the donated
+    output comes back committed, so an uncommitted init state would cost a
+    second specialization on the first steady step."""
+    from repro import compat
+    from repro.serve import serve_loop
+
+    cfg = configs.get_config("llama3.2-1b", smoke=True)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    bs, seq = 2, 16
+    step, _, st_shapes, _ = serve_loop.make_decode_step(
+        cfg, mesh, bs, seq, dtype=jnp.float32)
+    params = api.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    state = api.init_decode_state(cfg, bs, seq, dtype=jnp.float32)
+    state = jax.device_put(
+        state, serve_loop.state_shardings(cfg, mesh, st_shapes))
+    rng = np.random.default_rng(9)
+
+    def batch(pos):
+        return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (bs, 1)),
+                                      jnp.int32),
+                "pos": jnp.asarray(pos, jnp.int32)}
+
+    _, state = step(params, state, batch(0))           # warmup compile
+    with pallint_steady_state(entrypoints={"decode_step": step},
+                              where="serve_loop.decode_step"):
+        for pos in range(1, 4):
+            logits, state = step(params, state, batch(pos))
+    assert logits.shape == (bs, 1, cfg.vocab)
+
+
 def test_cells_and_skips():
     cells = configs.all_cells()
     # 10 archs × 4 shapes − 8 long_500k skips = 32 LM cells
