@@ -21,7 +21,7 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (fig8_strong_scaling, fig9_tile_sweep,
-                            fig10_batch_breakdown, regress,
+                            fig10_batch_breakdown, regress, serve_latency,
                             table2_cpu_vs_pim,
                             table3_broadcast_vs_subtree,
                             table4_memory_profile, table5_energy)
@@ -34,6 +34,7 @@ def main() -> int:
         "fig9": fig9_tile_sweep.run,
         "fig10": fig10_batch_breakdown.run,
         "regress": regress.run,
+        "serve_latency": serve_latency.run,
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -1,0 +1,147 @@
+"""Tail latency of the fault-tolerant serving loop under Poisson arrival.
+
+Two runs over the same deterministic arrival schedule:
+
+* ``clean`` — healthy steady state; the fast (device) path serves every
+  request.
+* ``chaos`` — the same load with a deterministic fault plan injected at the
+  step/placement seams (straggler, transient device loss, corrupted counts).
+  The point of the row is the *shape* of the tail: p99 absorbs the watchdog
+  + retry budget while p50 stays near the clean run, and shed/expired/
+  degraded rates quantify what availability cost the faults extracted.
+
+Writes ``BENCH_serve.json`` at the repo root and emits the usual CSV rows.
+
+Usage: ``PYTHONPATH=src:. python -m benchmarks.serve_latency``
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import engine as beng
+from repro.core import rtree
+from repro.data import datasets, spider
+from repro.serve.spatial_serve import ServeConfig, SpatialServer
+from repro.testing import chaos
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+NUM_RECTS = 20_000
+NUM_REQUESTS = 2_000
+ARRIVAL_RATE_QPS = 2_000.0       # Poisson arrival intensity
+DEADLINE_S = 2.0
+
+FAULT_PLAN = (
+    chaos.Fault(chaos.STRAGGLER, at_call=3, count=1, delay_s=0.75),
+    chaos.Fault(chaos.DEVICE_LOSS, at_call=8, count=2),
+    chaos.Fault(chaos.CORRUPT, at_call=14, count=1),
+)
+
+
+def _workload(seed: int = 5):
+    rects = spider.uniform(NUM_RECTS, seed=seed)
+    queries = datasets.make_queries(rects, 1.0, seed=seed + 1)
+    reps = -(-NUM_REQUESTS // len(queries))
+    queries = np.concatenate([queries] * reps)[:NUM_REQUESTS]
+    tree = rtree.build_str_3level(
+        rects, *rtree.choose_parameters(NUM_RECTS, 1))
+    return rects, queries, tree
+
+
+def _poisson_arrivals(n: int, rate_qps: float, seed: int = 7) -> np.ndarray:
+    """Cumulative arrival offsets (seconds) for a Poisson process — fixed
+    seed so the clean and chaos runs see the identical schedule."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+
+
+def _drive(srv: SpatialServer, queries: np.ndarray,
+           arrivals: np.ndarray) -> list:
+    """Open-loop load generator: submit each request at its scheduled
+    arrival time regardless of how the server is keeping up."""
+    srv.start()
+    tickets = []
+    t0 = time.perf_counter()
+    try:
+        for q, at in zip(queries, arrivals):
+            lag = at - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            tickets.append(srv.submit(q, deadline_s=DEADLINE_S))
+    finally:
+        srv.stop(drain=True, timeout=60.0)
+    return tickets
+
+
+def _summarize(label: str, srv: SpatialServer, tickets: list,
+               want: np.ndarray) -> dict:
+    m = srv.metrics()
+    ok = [t for t in tickets if t.status == "ok"]
+    # correctness gate: every completed response must be exact
+    got = np.array([t.count for t in ok], dtype=np.int32)
+    idx = [i for i, t in enumerate(tickets) if t.status == "ok"]
+    np.testing.assert_array_equal(got, want[idx])
+    lat = np.array([t.latency_s for t in ok], dtype=np.float64)
+    row = dict(
+        label=label,
+        requests=len(tickets),
+        completed=len(ok),
+        shed=m["shed"], expired=m["expired"],
+        shed_rate=m["shed_rate"],
+        retries=m["retries"], degradations=m["degradations"],
+        degraded_batches=m["degraded_batches"],
+        recoveries=m["recoveries"], faults=m["faults"],
+        health_final=m["health"],
+        p50_ms=float(np.percentile(lat, 50) * 1e3) if len(lat) else None,
+        p90_ms=float(np.percentile(lat, 90) * 1e3) if len(lat) else None,
+        p99_ms=float(np.percentile(lat, 99) * 1e3) if len(lat) else None,
+        max_ms=float(lat.max() * 1e3) if len(lat) else None,
+    )
+    common.emit(f"serve_latency/{label}/p50",
+                (row["p50_ms"] or 0.0) / 1e3,
+                f"p99_ms={row['p99_ms']:.1f} shed={m['shed']} "
+                f"expired={m['expired']} retries={m['retries']}")
+    return row
+
+
+def run(full: bool = False) -> list[dict]:
+    del full
+    rects, queries, tree = _workload()
+    from repro.kernels import ref
+    want = ref.overlap_counts_np_chunked(queries, rects)
+    arrivals = _poisson_arrivals(NUM_REQUESTS, ARRIVAL_RATE_QPS)
+    cfg = ServeConfig(batch_size=256, max_queue=4096,
+                      default_deadline_s=DEADLINE_S, watchdog_s=0.5,
+                      max_retries=2, backoff_base_s=0.005,
+                      backoff_cap_s=0.05, probe_every=2)
+
+    report = {"workload": dict(
+        num_rects=NUM_RECTS, requests=NUM_REQUESTS,
+        arrival="poisson", rate_qps=ARRIVAL_RATE_QPS,
+        deadline_s=DEADLINE_S)}
+
+    srv = SpatialServer(beng.BroadcastEngine(tree, common.mesh1(),
+                                             batch_size=cfg.batch_size), cfg)
+    report["clean"] = _summarize(
+        "clean", srv, _drive(srv, queries, arrivals), want)
+
+    srv = SpatialServer(beng.BroadcastEngine(tree, common.mesh1(),
+                                             batch_size=cfg.batch_size), cfg)
+    chaos.ChaosInjector(list(FAULT_PLAN)).install(srv)
+    report["chaos"] = _summarize(
+        "chaos", srv, _drive(srv, queries, arrivals), want)
+
+    with open(OUT_PATH, "w") as fh:
+        json.dump(report, fh, indent=2, default=float)
+    common.emit("serve_latency/report", 0.0,
+                f"wrote {os.path.abspath(OUT_PATH)}")
+    return [report]
+
+
+if __name__ == "__main__":
+    run()

@@ -27,6 +27,14 @@ PL109 int64-index-dtype       explicit ``int64`` dtypes in library code;
                               coordinates and indices are int32 by doctrine
                               (32-bit index-dtype consistency; suppress for
                               genuine 64-bit payloads such as byte counters).
+PL110 unbounded-serve-loop    in serving code (``repro/serve/``): ``while
+                              True`` loops with no exit at all, and
+                              except-and-continue retry patterns inside a
+                              constant-true loop.  Retries must carry a
+                              deadline or attempt bound (``for attempt in
+                              range(n)``, a watchdog, or a real loop
+                              condition) — an always-on serving loop must
+                              shed or degrade, never hang.
 
 Detection of "jit-compiled or kernel-adjacent" (PL101): a function is a jit
 context if (a) a decorator references ``jit``, (b) its name is passed as the
@@ -37,6 +45,7 @@ nested inside a jit context (e.g. ``@pl.when`` bodies inside a kernel).
 from __future__ import annotations
 
 import ast
+import os
 import re
 
 from repro.analysis.pallint.core import (
@@ -328,6 +337,41 @@ def check_device_host_bounce(tree, src, path):
             yield Finding("PL108", path, node.lineno,
                           "np.asarray over a jnp expression (device→host "
                           "bounce)")
+
+
+def _const_true(test: ast.AST) -> bool:
+    return isinstance(test, ast.Constant) and bool(test.value)
+
+
+@register("PL110", SCOPE_SRC,
+          "serving loops must be bounded: no exit-free while-True and no "
+          "except-and-continue retry without a deadline/attempt bound")
+def check_unbounded_serve_loop(tree, src, path):
+    parts = os.path.normpath(path).split(os.sep)
+    if "serve" not in parts:
+        return
+    info = ModuleInfo(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.While) and _const_true(node.test):
+            exits = any(isinstance(sub, (ast.Break, ast.Return, ast.Raise))
+                        for sub in ast.walk(node))
+            if not exits:
+                yield Finding(
+                    "PL110", path, node.lineno,
+                    "while True with no break/return/raise — an unbounded "
+                    "serving loop can never shed or degrade")
+        elif (isinstance(node, ast.ExceptHandler) and node.body
+                and isinstance(node.body[-1], ast.Continue)):
+            for parent in info.parent_chain(node):
+                if isinstance(parent, (ast.For, ast.AsyncFor)):
+                    break                       # bounded by the iterator
+                if isinstance(parent, ast.While):
+                    if _const_true(parent.test):
+                        yield Finding(
+                            "PL110", path, node.lineno,
+                            "except-and-continue inside while True — retry "
+                            "forever with no deadline/attempt bound")
+                    break
 
 
 @register("PL109", SCOPE_SRC,

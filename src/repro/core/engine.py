@@ -48,6 +48,69 @@ from repro.kernels import ops
 
 DEFAULT_BATCH = 10_000  # paper: "queries are processed in batches of up to 10,000"
 
+_INT32_MIN = -(2**31)
+_INT32_MAX = 2**31 - 1
+
+
+class QueryValidationError(ValueError):
+    """A malformed query batch was rejected at the engine boundary."""
+
+
+def validate_queries(
+    queries, *, strict: bool = False, where: str = "queries"
+) -> np.ndarray:
+    """Validate and canonicalize a query batch at the engine boundary.
+
+    The kernels assume well-formed int32 corner rects ``[xmin, ymin, xmax,
+    ymax]`` with ``lo <= hi`` — anything else silently produces wrong counts
+    (a NaN compares false everywhere, an int64 coordinate wraps on the cast,
+    a ``lo > hi`` rect aliases the EMPTY padding sentinel and counts zero).
+    This boundary turns each of those into an explicit contract:
+
+    * shape must be ``(Q, 4)`` — anything else raises;
+    * dtype must be integer, or float with finite integral values — NaN/inf
+      and fractional coordinates raise;
+    * coordinates must fit in int32 — out-of-range values raise rather than
+      wrap;
+    * ``lo > hi`` rects are canonicalized by swapping the corners (or raise
+      when ``strict=True`` — the serving admission path uses strict mode so
+      a malformed request is refused, not reinterpreted).
+
+    Returns a fresh ``(Q, 4) int32`` array safe for the device pipeline.
+    """
+    arr = np.asarray(queries)
+    if arr.ndim != 2 or arr.shape[-1] != 4:
+        raise QueryValidationError(
+            f"{where}: expected shape (Q, 4), got {arr.shape}")
+    if arr.dtype.kind == "f":
+        if arr.size and not np.isfinite(arr).all():
+            raise QueryValidationError(
+                f"{where}: NaN/inf coordinates are not valid rects")
+        if arr.size and not (np.mod(arr, 1) == 0).all():
+            raise QueryValidationError(
+                f"{where}: fractional float coordinates — scale to the "
+                "fixed-precision int32 grid first (spider.SCALE)")
+    elif arr.dtype.kind not in "iu":
+        raise QueryValidationError(
+            f"{where}: dtype {arr.dtype} is not a coordinate dtype "
+            "(expected integer, or float with integral values)")
+    if arr.size and (arr.min() < _INT32_MIN or arr.max() > _INT32_MAX):
+        raise QueryValidationError(
+            f"{where}: coordinates outside the int32 range would wrap "
+            "on the device cast")
+    out = arr.astype(np.int32, copy=True)
+    if out.size:
+        flipped = (out[:, 0] > out[:, 2]) | (out[:, 1] > out[:, 3])
+        if flipped.any():
+            if strict:
+                raise QueryValidationError(
+                    f"{where}: {int(flipped.sum())} rect(s) with lo > hi "
+                    "(strict mode rejects rather than canonicalizes)")
+            lo = np.minimum(out[:, :2], out[:, 2:])
+            hi = np.maximum(out[:, :2], out[:, 2:])
+            out = np.concatenate([lo, hi], axis=1)
+    return np.ascontiguousarray(out, dtype=np.int32)
+
 
 def _mesh_device_count(mesh: jax.sharding.Mesh) -> int:
     return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
@@ -330,7 +393,7 @@ class BroadcastEngine:
 
     def query(self, queries: np.ndarray) -> np.ndarray:
         """Batched range-query counts (paper Sec III-C.4/5)."""
-        queries = np.asarray(queries, dtype=np.int32)
+        queries = validate_queries(queries, where="BroadcastEngine.query")
         if self.sort_queries:
             order = morton_order(queries)
             inv = np.argsort(order, kind="stable")

@@ -33,7 +33,7 @@ import numpy as np
 
 from repro import compat
 from repro.core import rtree
-from repro.core.engine import stream_batches
+from repro.core.engine import stream_batches, validate_queries
 from repro.core.types import EMPTY_RECT, TopDownNode, mbr_of
 from repro.kernels import ops
 
@@ -177,6 +177,7 @@ class SubtreeEngine:
             mesh, impl=impl, tq=tq, tr=tr, on_trace=_count_trace)
 
     def query(self, queries: np.ndarray) -> np.ndarray:
+        queries = validate_queries(queries, where="SubtreeEngine.query")
         return stream_batches(
             self._step,
             (self.dev_coords, self.dev_tile_mbrs, self.dev_mbrs),

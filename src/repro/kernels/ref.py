@@ -61,6 +61,31 @@ def overlap_counts_np(queries: np.ndarray, rects: np.ndarray) -> np.ndarray:
     return out
 
 
+def overlap_counts_np_chunked(
+    queries: np.ndarray, rects: np.ndarray, chunk: int = 256
+) -> np.ndarray:
+    """Vectorized NumPy twin of :func:`overlap_counts_np`, chunked over
+    queries to bound the (chunk, R) broadcast.
+
+    This is the serving layer's graceful-degradation path
+    (``repro.serve.spatial_serve``): when the device fast path is lost, a
+    batch must still be answered exactly from the host copy of the leaf
+    rects, and the per-query Python loop of ``overlap_counts_np`` is too
+    slow for whole serving batches."""
+    q = queries.shape[0]
+    out = np.zeros(q, dtype=np.int32)
+    for lo in range(0, q, chunk):
+        qc = queries[lo: lo + chunk]
+        hits = (
+            (qc[:, None, 0] <= rects[None, :, 2])
+            & (rects[None, :, 0] <= qc[:, None, 2])
+            & (qc[:, None, 1] <= rects[None, :, 3])
+            & (rects[None, :, 1] <= qc[:, None, 3])
+        )
+        out[lo: lo + chunk] = hits.sum(axis=1, dtype=np.int32)
+    return out
+
+
 def masked_overlap_counts_ref(
     queries: jnp.ndarray, mask: jnp.ndarray, rects: jnp.ndarray,
     query_chunk: int | None = None,

@@ -1,0 +1,512 @@
+"""Fault-tolerant always-on spatial serving (DESIGN.md Sec 11).
+
+Everything in :mod:`repro.core.engine` assumes a perfect offline run: one
+``query(all_queries)`` call, no request queue, no deadlines, no recovery
+from a lost device or a corrupted kernel output.  This module is the bridge
+to the ROADMAP's "millions of users" serving layer, with robustness as the
+headline:
+
+* **Bounded request queue + admission control** — :meth:`SpatialServer.submit`
+  validates each rect (strict mode: malformed requests are refused, never
+  reinterpreted), sheds explicitly when the queue is full, and sheds at
+  admission when the EWMA batch latency predicts the deadline cannot be met
+  (backpressure as an explicit signal, not an unbounded queue).
+* **Micro-batch formation into the one compiled shape** — requests are
+  drained into ``(batch_size, 4)`` batches, Morton-ordered per batch for
+  tile-MBR locality (counts are un-permuted on completion), EMPTY-padded to
+  the fixed shape so the jitted step never retraces.
+* **Watchdog + capped exponential backoff** — each fast-path batch runs
+  under a watchdog timeout (PrIM shows wide per-DPU latency variance;
+  stragglers are the norm, not the exception); failures retry a *bounded*
+  number of times with capped backoff (pallint PL110 machine-checks that
+  serving loops stay bounded).
+* **Graceful degradation** — after retries are exhausted (device loss,
+  persistent stragglers, corrupted output) the server degrades to the exact
+  NumPy reference kernel (:func:`repro.kernels.ref.overlap_counts_np_chunked`)
+  over the host copy of the leaf rects, and probes the fast path periodically
+  to recover.  In healthy steady state a sampled oracle cross-check guards
+  against silent corruption; a failed cross-check is treated as a fault.
+* **Health/metrics surface** — queue depth, shed/expired counts, retries,
+  degradations/recoveries, per-fault counters, and p50/p99 batch and request
+  latency.
+
+Fault injection for all of the above lives in :mod:`repro.testing.chaos`,
+which wraps the two seams this module exposes (``_step`` — the jitted query
+step, and ``_place`` — batch staging via ``jax.device_put``).
+
+In no-fault steady state the served counts are bit-equal to
+``BroadcastEngine.query``: same step, same padding, same Morton ordering.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+import dataclasses
+import threading
+import time
+import warnings
+from typing import Callable
+
+import numpy as np
+
+import jax
+
+from repro.core.engine import (
+    EMPTY_RECT, morton_order, validate_queries)
+from repro.kernels import ref
+
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+
+STATUS_PENDING = "pending"
+STATUS_OK = "ok"
+STATUS_SHED = "shed"
+STATUS_EXPIRED = "expired"
+
+PATH_FAST = "fast"
+PATH_REF = "ref"
+
+
+class WatchdogTimeout(RuntimeError):
+    """The fast-path batch exceeded the watchdog deadline (straggler)."""
+
+
+class CorruptOutputError(RuntimeError):
+    """The fast path returned counts that failed sanity or cross-check."""
+
+
+class SpatialTicket:
+    """One submitted request: completion event + result fields.
+
+    ``status`` is one of ``ok`` / ``shed`` / ``expired`` (or ``pending``
+    until completed); ``path`` records which execution path answered
+    (``fast`` or ``ref``), ``reason`` why a request was shed."""
+
+    __slots__ = ("rect", "submit_t", "deadline", "status", "reason",
+                 "count", "path", "latency_s", "_event")
+
+    def __init__(self, rect: np.ndarray, submit_t: float, deadline: float):
+        self.rect = rect
+        self.submit_t = submit_t
+        self.deadline = deadline
+        self.status = STATUS_PENDING
+        self.reason = None
+        self.count = None
+        self.path = None
+        self.latency_s = None
+        self._event = threading.Event()
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        """Block until completed; returns False on wait timeout."""
+        return self._event.wait(timeout)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-loop policy knobs (every bound the chaos suite exercises)."""
+
+    batch_size: int = 256           # the one compiled (bs, 4) shape
+    max_queue: int = 1024           # bounded queue; beyond this, shed
+    default_deadline_s: float = 1.0
+    watchdog_s: float = 2.0         # per-attempt fast-path time budget
+    max_retries: int = 3            # bounded retry (PL110 doctrine)
+    backoff_base_s: float = 0.02    # capped exponential backoff
+    backoff_cap_s: float = 0.5
+    crosscheck_every: int = 64      # healthy-state sampled oracle check
+    crosscheck_samples: int = 8
+    probe_every: int = 8            # degraded-state fast-path probe cadence
+    sort_batches: bool = True       # per-batch Morton ordering
+
+
+def _engine_bindings(engine):
+    """Extract (step, operands, rep_sharding, host_rects) from an engine.
+
+    Works for both ``BroadcastEngine`` and ``SubtreeEngine`` — the step
+    arity and the replicated query sharding are identical; only the operand
+    names and the host-side rect layout differ."""
+    if hasattr(engine, "leaf_coords"):          # BroadcastEngine
+        operands = (engine.leaf_coords, engine.rect_tile_mbrs,
+                    engine.cover_mbrs)
+        flat = engine.layout.leaf_rects_flat
+    else:                                       # SubtreeEngine
+        operands = (engine.dev_coords, engine.dev_tile_mbrs, engine.dev_mbrs)
+        flat = engine.layout.rects.reshape(-1, 4)
+    host_rects = flat[flat[:, 0] <= flat[:, 2]]
+    return engine._step, operands, engine._rep_sh, host_rects
+
+
+class SpatialServer:
+    """Always-on serving loop over a spatial engine's compiled query step.
+
+    Single-consumer: ``pump``/``drain`` must be driven from one thread
+    (either the caller's, or the background worker started by
+    :meth:`start`).  ``submit`` is thread-safe.
+    """
+
+    def __init__(
+        self,
+        engine,
+        config: ServeConfig | None = None,
+        *,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+        warmup: bool = True,
+    ):
+        self.engine = engine
+        self.config = config or ServeConfig()
+        self._clock = clock
+        self._sleep = sleep
+
+        # the two chaos seams: the jitted step and batch staging
+        self._step, self._operands, self._rep_sh, self._host_rects = (
+            _engine_bindings(engine))
+        self._place = jax.device_put
+
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._queue: collections.deque[SpatialTicket] = collections.deque()
+        self._accepting = True
+        self._stop_evt = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+
+        self.health = HEALTHY
+        self._served_batches = 0
+        self._degraded_batches_since = 0
+        self._batch_ewma_s: float | None = None
+        self._batch_lat = collections.deque(maxlen=512)
+        self._req_lat = collections.deque(maxlen=4096)
+        self._counters = collections.Counter()
+        self._faults = collections.Counter()
+        self._last_fault: str | None = None
+
+        bs = self.config.batch_size
+        self._pad_rect = np.asarray(EMPTY_RECT, dtype=np.int32).reshape(1, 4)
+        if warmup:
+            self._warmup(bs)
+
+    # ------------------------------------------------------------------ admit
+
+    def submit(self, rect, *, deadline_s: float | None = None) -> SpatialTicket:
+        """Admit one range-count request.  Always returns a ticket; a shed
+        request comes back already completed with ``status='shed'``."""
+        arr = np.asarray(rect)
+        if arr.shape == (4,):
+            arr = arr.reshape(1, 4)
+        validated = validate_queries(
+            arr, strict=True, where="SpatialServer.submit")[0]
+        now = self._clock()
+        if deadline_s is None:
+            deadline_s = self.config.default_deadline_s
+        ticket = SpatialTicket(validated, now, now + deadline_s)
+        with self._lock:
+            self._counters["submitted"] += 1
+            if not self._accepting:
+                return self._shed(ticket, "stopped", now)
+            if len(self._queue) >= self.config.max_queue:
+                return self._shed(ticket, "capacity", now)
+            ewma = self._batch_ewma_s
+            if ewma is not None:
+                batches_ahead = len(self._queue) // self.config.batch_size + 1
+                if now + batches_ahead * ewma > ticket.deadline:
+                    return self._shed(ticket, "deadline", now)
+            self._queue.append(ticket)
+            self._not_empty.notify()
+        return ticket
+
+    def _shed(self, ticket: SpatialTicket, reason: str, now: float
+              ) -> SpatialTicket:
+        self._counters[f"shed_{reason}"] += 1
+        ticket.status = STATUS_SHED
+        ticket.reason = reason
+        ticket.latency_s = now - ticket.submit_t
+        ticket._event.set()
+        return ticket
+
+    # ------------------------------------------------------------------ serve
+
+    def pump(self, block: bool = False, timeout: float | None = None) -> int:
+        """Form and serve one micro-batch.  Returns completed requests."""
+        cfg = self.config
+        taken: list[SpatialTicket] = []
+        with self._not_empty:
+            if block and not self._queue:
+                self._not_empty.wait(timeout)
+            while self._queue and len(taken) < cfg.batch_size:
+                taken.append(self._queue.popleft())
+        if not taken:
+            return 0
+
+        now = self._clock()
+        live: list[SpatialTicket] = []
+        for t in taken:
+            if t.deadline < now:
+                with self._lock:
+                    self._counters["expired"] += 1
+                t.status = STATUS_EXPIRED
+                t.latency_s = now - t.submit_t
+                t._event.set()
+            else:
+                live.append(t)
+        if not live:
+            return len(taken)
+
+        k = len(live)
+        batch = np.stack([t.rect for t in live]).astype(np.int32)
+        inv = None
+        if cfg.sort_batches and k > 1:
+            order = morton_order(batch)
+            inv = np.argsort(order, kind="stable")
+            batch = batch[order]
+        pad = cfg.batch_size - k
+        if pad:
+            batch = np.concatenate(
+                [batch, np.tile(self._pad_rect, (pad, 1))])
+
+        t0 = self._clock()
+        counts, path = self._execute(batch, k)
+        dt = self._clock() - t0
+        if inv is not None:
+            counts = counts[inv]
+
+        done_t = self._clock()
+        with self._lock:
+            self._batch_lat.append(dt)
+            self._batch_ewma_s = (dt if self._batch_ewma_s is None
+                                  else 0.8 * self._batch_ewma_s + 0.2 * dt)
+            self._counters["served"] += k
+            self._served_batches += 1
+        for t, c in zip(live, counts):
+            t.status = STATUS_OK
+            t.count = int(c)
+            t.path = path
+            t.latency_s = done_t - t.submit_t
+            self._req_lat.append(t.latency_s)
+            t._event.set()
+        return len(taken)
+
+    def drain(self, timeout: float = 30.0) -> int:
+        """Pump until the queue is empty (bounded by ``timeout``)."""
+        served = 0
+        deadline = self._clock() + timeout
+        while self._queue and self._clock() < deadline:
+            served += self.pump()
+        return served
+
+    # --------------------------------------------------------------- execute
+
+    def _execute(self, padded: np.ndarray, k: int
+                 ) -> tuple[np.ndarray, str]:
+        """Serve one padded batch: fast path with watchdog/retry/cross-check,
+        degrading to (and recovering from) the reference path."""
+        cfg = self.config
+        if self.health == DEGRADED:
+            self._degraded_batches_since += 1
+            if (cfg.probe_every > 0
+                    and self._degraded_batches_since % cfg.probe_every == 0):
+                counts = self._probe(padded, k)
+                if counts is not None:
+                    return counts[:k], PATH_FAST
+            with self._lock:
+                self._counters["degraded_batches"] += 1
+            return self._ref_counts(padded[:k]), PATH_REF
+
+        last: Exception | None = None
+        for attempt in range(cfg.max_retries + 1):
+            try:
+                counts = self._fast_batch(padded)
+                self._maybe_crosscheck(padded, counts, k)
+                return counts[:k], PATH_FAST
+            except Exception as e:          # bounded: max_retries + 1 attempts
+                last = e
+                self._record_fault(e)
+                if attempt < cfg.max_retries:
+                    self._sleep(min(cfg.backoff_base_s * (2 ** attempt),
+                                    cfg.backoff_cap_s))
+        self._degrade(last)
+        with self._lock:
+            self._counters["degraded_batches"] += 1
+        return self._ref_counts(padded[:k]), PATH_REF
+
+    def _fast_batch(self, padded: np.ndarray) -> np.ndarray:
+        """One watchdog-guarded fast-path attempt: stage → step → retrieve."""
+
+        def call():
+            staged = self._place(padded, self._rep_sh)
+            with warnings.catch_warnings():
+                # Same expected advisory as stream_batches: the donated
+                # (bs, 4) query buffer can never alias the (bs,) counts.
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                out = self._step(*self._operands, staged)
+            return np.asarray(jax.device_get(out))
+
+        fut = self._pool.submit(call)
+        try:
+            counts = fut.result(timeout=self.config.watchdog_s)
+        except concurrent.futures.TimeoutError:
+            # Abandon the stuck worker (it finishes or dies on its own) and
+            # give the next attempt a fresh one — never wait on a straggler.
+            self._pool.shutdown(wait=False)
+            self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+            raise WatchdogTimeout(
+                f"batch exceeded watchdog {self.config.watchdog_s}s") from None
+        self._sanity_check(counts, padded.shape[0])
+        return counts
+
+    def _sanity_check(self, counts: np.ndarray, bs: int) -> None:
+        """Cheap full-batch output validation: shape, dtype, count bounds.
+        Catches NaN/corrupted kernel output before any response is released."""
+        n = self._host_rects.shape[0]
+        if counts.shape != (bs,):
+            raise CorruptOutputError(
+                f"fast path returned shape {counts.shape}, expected ({bs},)")
+        if counts.dtype.kind not in "iu":
+            raise CorruptOutputError(
+                f"fast path returned dtype {counts.dtype}, expected integer")
+        if counts.size and (int(counts.min()) < 0 or int(counts.max()) > n):
+            raise CorruptOutputError(
+                "fast path returned counts outside [0, num_rects]")
+
+    def _maybe_crosscheck(self, padded: np.ndarray, counts: np.ndarray,
+                          k: int) -> None:
+        """Healthy-state sampled oracle cross-check (silent-corruption net)."""
+        cfg = self.config
+        if cfg.crosscheck_every <= 0:
+            return
+        if self._served_batches % cfg.crosscheck_every != 0:
+            return
+        m = min(k, cfg.crosscheck_samples)
+        if m == 0:
+            return
+        with self._lock:
+            self._counters["crosschecks"] += 1
+        want = ref.overlap_counts_np_chunked(padded[:m], self._host_rects)
+        if not np.array_equal(counts[:m].astype(np.int32), want):
+            raise CorruptOutputError(
+                "sampled cross-check mismatch against the reference kernel")
+
+    def _probe(self, padded: np.ndarray, k: int) -> np.ndarray | None:
+        """Degraded-state recovery probe: one guarded fast-path attempt,
+        validated against the reference on a sample before trusting it."""
+        with self._lock:
+            self._counters["probes"] += 1
+        try:
+            counts = self._fast_batch(padded)
+            m = min(k, max(self.config.crosscheck_samples, 1))
+            want = ref.overlap_counts_np_chunked(
+                padded[:m], self._host_rects)
+            if not np.array_equal(counts[:m].astype(np.int32), want):
+                raise CorruptOutputError("probe cross-check mismatch")
+        except Exception as e:              # probe failed; stay degraded
+            self._record_fault(e)
+            return None
+        with self._lock:
+            self.health = HEALTHY
+            self._counters["recoveries"] += 1
+            self._degraded_batches_since = 0
+        return counts
+
+    def _ref_counts(self, queries: np.ndarray) -> np.ndarray:
+        """The degradation path: exact counts from the host rect copy."""
+        return ref.overlap_counts_np_chunked(queries, self._host_rects)
+
+    def _record_fault(self, e: Exception) -> None:
+        kind = ("watchdog" if isinstance(e, WatchdogTimeout)
+                else "corrupt" if isinstance(e, CorruptOutputError)
+                else type(e).__name__)
+        with self._lock:
+            self._counters["retries"] += 1
+            self._faults[kind] += 1
+            self._last_fault = f"{kind}: {e}"
+
+    def _degrade(self, e: Exception | None) -> None:
+        with self._lock:
+            if self.health != DEGRADED:
+                self.health = DEGRADED
+                self._counters["degradations"] += 1
+                self._degraded_batches_since = 0
+
+    def _warmup(self, bs: int) -> None:
+        """Compile the (bs, 4) step once, outside the watchdog — compilation
+        time must never be mistaken for a straggler."""
+        padded = np.tile(self._pad_rect, (bs, 1))
+        staged = self._place(padded, self._rep_sh)
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            np.asarray(jax.device_get(self._step(*self._operands, staged)))
+
+    # ------------------------------------------------------------- lifecycle
+
+    def start(self) -> None:
+        """Run the serving loop on a background worker thread."""
+        if self._thread is not None:
+            return
+        self._stop_evt.clear()
+        self._thread = threading.Thread(
+            target=self._run, name="spatial-serve", daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while not self._stop_evt.is_set():
+            self.pump(block=True, timeout=0.05)
+
+    def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
+        """Stop the worker; optionally drain the queue first (bounded)."""
+        with self._lock:
+            self._accepting = False
+        if self._thread is not None:
+            self._stop_evt.set()
+            with self._not_empty:
+                self._not_empty.notify_all()
+            self._thread.join(timeout)
+            self._thread = None
+        if drain:
+            self.drain(timeout)
+        self._pool.shutdown(wait=False)
+
+    # --------------------------------------------------------------- observe
+
+    @staticmethod
+    def _pct(ring, q: float) -> float | None:
+        return float(np.percentile(np.asarray(ring), q)) if ring else None
+
+    def metrics(self) -> dict:
+        """Snapshot of the health/metrics surface."""
+        with self._lock:
+            c = dict(self._counters)
+            faults = dict(self._faults)
+            depth = len(self._queue)
+            batch_lat = list(self._batch_lat)
+            req_lat = list(self._req_lat)
+            health = self.health
+            last_fault = self._last_fault
+        submitted = c.get("submitted", 0)
+        shed = sum(v for k, v in c.items() if k.startswith("shed_"))
+        return {
+            "health": health,
+            "queue_depth": depth,
+            "submitted": submitted,
+            "served": c.get("served", 0),
+            "shed": shed,
+            "shed_rate": shed / submitted if submitted else 0.0,
+            "expired": c.get("expired", 0),
+            "retries": c.get("retries", 0),
+            "degradations": c.get("degradations", 0),
+            "degraded_batches": c.get("degraded_batches", 0),
+            "recoveries": c.get("recoveries", 0),
+            "probes": c.get("probes", 0),
+            "crosschecks": c.get("crosschecks", 0),
+            "faults": faults,
+            "last_fault": last_fault,
+            "batch_p50_s": self._pct(batch_lat, 50),
+            "batch_p99_s": self._pct(batch_lat, 99),
+            "request_p50_s": self._pct(req_lat, 50),
+            "request_p99_s": self._pct(req_lat, 99),
+            "counters": c,
+        }

@@ -1,0 +1,150 @@
+"""Deterministic fault-injection harness for the spatial serving stack.
+
+Real PIM systems exhibit wide per-DPU latency variance (PrIM, PAPERS.md) and
+production fleets lose devices, hit allocator limits, and occasionally return
+garbage.  This module makes those failures *reproducible*: faults are
+scheduled by call index against the two seams the serving loop exposes —
+
+* the jitted query step (``SpatialServer._step`` — the same callable
+  ``stream_batches``/``make_query_step`` produce), and
+* batch staging (``SpatialServer._place`` — ``jax.device_put``).
+
+Fault kinds (the chaos suite drives each through the server):
+
+==============  ===========================================================
+``device_loss``  the step raises :class:`DeviceLostError` (models an XLA
+                 "device lost / INTERNAL" runtime failure)
+``straggler``    the step sleeps ``delay_s`` before computing (models a
+                 slow shard; trips the server watchdog when over budget)
+``nan_counts``   the step returns a float batch with NaNs (models corrupted
+                 DMA / kernel output; trips the dtype sanity check)
+``corrupt``      the step returns out-of-range int counts (trips the bounds
+                 sanity check or the sampled oracle cross-check)
+``oom``          staging raises :class:`PlacementOOMError` (models a
+                 RESOURCE_EXHAUSTED on ``device_put``)
+==============  ===========================================================
+
+A plan is a list of :class:`Fault` entries, each naming a kind, the 0-based
+call index at which it fires, and how many consecutive calls it affects —
+no randomness, so every chaos test replays exactly.  ``install`` wraps a
+:class:`~repro.serve.spatial_serve.SpatialServer` in place; ``wrap_step`` /
+``wrap_place`` wrap bare callables for use at the ``stream_batches`` seam.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+DEVICE_LOSS = "device_loss"
+STRAGGLER = "straggler"
+NAN_COUNTS = "nan_counts"
+CORRUPT = "corrupt"
+OOM = "oom"
+
+_STEP_KINDS = (DEVICE_LOSS, STRAGGLER, NAN_COUNTS, CORRUPT)
+_PLACE_KINDS = (OOM,)
+
+KINDS = _STEP_KINDS + _PLACE_KINDS
+
+
+class DeviceLostError(RuntimeError):
+    """Injected stand-in for an XLA device-loss runtime error."""
+
+
+class PlacementOOMError(RuntimeError):
+    """Injected stand-in for RESOURCE_EXHAUSTED during ``device_put``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault: ``kind`` fires on calls
+    ``[at_call, at_call + count)`` of its seam."""
+
+    kind: str
+    at_call: int
+    count: int = 1
+    delay_s: float = 0.0      # straggler sleep
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.at_call < 0 or self.count < 1:
+            raise ValueError("at_call must be >= 0 and count >= 1")
+
+    def active(self, call_idx: int) -> bool:
+        return self.at_call <= call_idx < self.at_call + self.count
+
+
+class ChaosInjector:
+    """Deterministic per-call fault injection over the serving seams.
+
+    ``step_calls`` / ``place_calls`` count invocations since installation;
+    ``log`` records every injected fault as ``(seam_call_idx, kind)`` so
+    tests can assert exactly what fired."""
+
+    def __init__(self, faults: Sequence[Fault],
+                 *, sleep: Callable[[float], None] = time.sleep):
+        self.faults = list(faults)
+        self._sleep = sleep
+        self.step_calls = 0
+        self.place_calls = 0
+        self.log: list[tuple[int, str]] = []
+
+    def _match(self, idx: int, kinds: tuple[str, ...]) -> Fault | None:
+        for f in self.faults:
+            if f.kind in kinds and f.active(idx):
+                return f
+        return None
+
+    def wrap_step(self, step: Callable) -> Callable:
+        """Wrap a jitted query step (the ``make_query_step`` seam)."""
+
+        def chaos_step(*args, **kwargs):
+            idx = self.step_calls
+            self.step_calls += 1
+            fault = self._match(idx, _STEP_KINDS)
+            if fault is None:
+                return step(*args, **kwargs)
+            self.log.append((idx, fault.kind))
+            if fault.kind == DEVICE_LOSS:
+                raise DeviceLostError(
+                    f"injected device loss at step call {idx}")
+            if fault.kind == STRAGGLER:
+                self._sleep(fault.delay_s)
+                return step(*args, **kwargs)
+            out = np.asarray(step(*args, **kwargs))
+            if fault.kind == NAN_COUNTS:
+                bad = out.astype(np.float64)
+                bad[:: max(1, len(bad) // 4)] = np.nan
+                return bad
+            # CORRUPT: exact-shape int garbage, out of [0, num_rects]
+            bad = out.copy()
+            bad[:: max(1, len(bad) // 4)] = -7
+            return bad
+
+        return chaos_step
+
+    def wrap_place(self, place: Callable) -> Callable:
+        """Wrap batch staging (the ``jax.device_put`` seam)."""
+
+        def chaos_place(*args, **kwargs):
+            idx = self.place_calls
+            self.place_calls += 1
+            fault = self._match(idx, _PLACE_KINDS)
+            if fault is not None:
+                self.log.append((idx, fault.kind))
+                raise PlacementOOMError(
+                    f"injected RESOURCE_EXHAUSTED at placement call {idx}")
+            return place(*args, **kwargs)
+
+        return chaos_place
+
+    def install(self, server) -> "ChaosInjector":
+        """Wrap a ``SpatialServer``'s fast-path seams in place."""
+        server._step = self.wrap_step(server._step)
+        server._place = self.wrap_place(server._place)
+        return self

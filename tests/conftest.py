@@ -19,6 +19,8 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running subprocess tests")
+    config.addinivalue_line(
+        "markers", "chaos: fault-injection serving tests (dedicated CI job)")
 
 
 try:  # pragma: no cover - exercised only when hypothesis is installed

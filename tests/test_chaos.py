@@ -1,0 +1,190 @@
+"""Chaos suite: under every injected fault the serving loop never crashes or
+hangs — it retries, sheds, or degrades to the reference path, and every
+completed response is exact.
+
+All tests are marked ``chaos`` and run both in tier-1 and in the dedicated
+CI chaos job (with ``timeout-minutes`` as the outer hang guard).  Fault
+schedules are deterministic (:mod:`repro.testing.chaos`), so failures replay.
+"""
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import engine as beng
+from repro.core import rtree
+from repro.data import datasets, spider
+from repro.kernels import ref
+from repro.serve.spatial_serve import (
+    DEGRADED, HEALTHY, ServeConfig, SpatialServer)
+from repro.testing import chaos
+
+pytestmark = pytest.mark.chaos
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rects = spider.uniform(2500, seed=61, max_size=0.02)
+    queries = datasets.make_queries(rects, 0.2, seed=62)   # 500 queries
+    tree = rtree.build_str_3level(rects, leaf_capacity=32, fanout=8)
+    want = ref.overlap_counts_np(queries, rects)
+    return rects, queries, tree, want
+
+
+def _server(tree, **overrides):
+    cfg = dict(batch_size=64, watchdog_s=30.0, max_retries=2,
+               backoff_base_s=0.001, backoff_cap_s=0.01, probe_every=1)
+    cfg.update(overrides)
+    eng = beng.BroadcastEngine(tree, compat.make_mesh((1, 1),
+                                                      ("data", "model")),
+                               batch_size=64)
+    return SpatialServer(eng, ServeConfig(**cfg))
+
+
+def _serve_all(srv, queries):
+    tickets = [srv.submit(q, deadline_s=120.0) for q in queries]
+    srv.drain()
+    assert all(t.done for t in tickets), "serving loop hung"
+    return np.array([t.count for t in tickets], dtype=np.int32), tickets
+
+
+def test_device_loss_transient_retries(workload):
+    """A lost device for two calls: retried with backoff, exact output,
+    still healthy at the end."""
+    _, queries, tree, want = workload
+    srv = _server(tree)
+    inj = chaos.ChaosInjector(
+        [chaos.Fault(chaos.DEVICE_LOSS, at_call=1, count=2)]).install(srv)
+    got, _ = _serve_all(srv, queries)
+    np.testing.assert_array_equal(got, want)
+    m = srv.metrics()
+    assert m["retries"] >= 2 and m["faults"].get("DeviceLostError") == 2
+    assert m["health"] == HEALTHY and m["degradations"] == 0
+    assert [k for _, k in inj.log] == ["device_loss", "device_loss"]
+
+
+def test_device_loss_persistent_degrades_then_recovers(workload):
+    """Retries exhausted → degrade to the reference kernel; the periodic
+    probe recovers the fast path once the device returns.  Every response
+    is exact on both paths."""
+    _, queries, tree, want = workload
+    srv = _server(tree, max_retries=0)
+    chaos.ChaosInjector(
+        [chaos.Fault(chaos.DEVICE_LOSS, at_call=0, count=2)]).install(srv)
+    got, tickets = _serve_all(srv, queries)
+    np.testing.assert_array_equal(got, want)
+    m = srv.metrics()
+    assert m["degradations"] == 1 and m["degraded_batches"] >= 1
+    assert m["recoveries"] == 1 and m["health"] == HEALTHY
+    paths = [t.path for t in tickets]
+    assert "ref" in paths and "fast" in paths    # degraded, then recovered
+
+
+def test_straggler_trips_watchdog(workload):
+    """A shard stalling past the watchdog budget is abandoned and retried —
+    tail latency bumps, correctness does not."""
+    _, queries, tree, want = workload
+    srv = _server(tree, watchdog_s=0.2, max_retries=2)
+    chaos.ChaosInjector(
+        [chaos.Fault(chaos.STRAGGLER, at_call=2, count=1, delay_s=1.0)]
+    ).install(srv)
+    got, _ = _serve_all(srv, queries)
+    np.testing.assert_array_equal(got, want)
+    m = srv.metrics()
+    assert m["faults"].get("watchdog") == 1
+    assert m["health"] == HEALTHY
+
+
+def test_nan_counts_never_released(workload):
+    """Corrupted (NaN) kernel output is caught by the output sanity check —
+    no corrupt count ever reaches a response."""
+    _, queries, tree, want = workload
+    srv = _server(tree)
+    chaos.ChaosInjector(
+        [chaos.Fault(chaos.NAN_COUNTS, at_call=3, count=1)]).install(srv)
+    got, _ = _serve_all(srv, queries)
+    np.testing.assert_array_equal(got, want)
+    assert srv.metrics()["faults"].get("corrupt") == 1
+
+
+def test_corrupt_counts_never_released(workload):
+    _, queries, tree, want = workload
+    srv = _server(tree)
+    chaos.ChaosInjector(
+        [chaos.Fault(chaos.CORRUPT, at_call=1, count=1)]).install(srv)
+    got, _ = _serve_all(srv, queries)
+    np.testing.assert_array_equal(got, want)
+    assert srv.metrics()["faults"].get("corrupt") == 1
+
+
+def test_plausible_corruption_caught_by_crosscheck(workload):
+    """Off-by-one corruption passes the bounds sanity check; the sampled
+    oracle cross-check catches it (crosscheck_every=1 → every batch)."""
+    _, queries, tree, want = workload
+    srv = _server(tree, crosscheck_every=1, crosscheck_samples=64)
+    calls = {"n": 0}
+    real_step = srv._step
+
+    def off_by_one_step(*args, **kw):
+        idx = calls["n"]
+        calls["n"] += 1
+        out = np.asarray(real_step(*args, **kw))
+        return out + 1 if idx == 2 else out
+
+    srv._step = off_by_one_step
+    got, _ = _serve_all(srv, queries)
+    np.testing.assert_array_equal(got, want)
+    m = srv.metrics()
+    assert m["faults"].get("corrupt") == 1
+    assert m["crosschecks"] >= 1
+
+
+def test_placement_oom_retries(workload):
+    """RESOURCE_EXHAUSTED during batch staging is retried like any other
+    fast-path fault."""
+    _, queries, tree, want = workload
+    srv = _server(tree)
+    chaos.ChaosInjector(
+        [chaos.Fault(chaos.OOM, at_call=1, count=2)]).install(srv)
+    got, _ = _serve_all(srv, queries)
+    np.testing.assert_array_equal(got, want)
+    assert srv.metrics()["faults"].get("PlacementOOMError") == 2
+
+
+def test_total_fast_path_loss_still_serves_exactly(workload):
+    """Worst case: the fast path never works at all.  The server degrades
+    permanently to the reference kernel and still answers every request
+    exactly — availability through graceful degradation, not a hang."""
+    _, queries, tree, want = workload
+    srv = _server(tree, max_retries=1, probe_every=4)
+    chaos.ChaosInjector(
+        [chaos.Fault(chaos.DEVICE_LOSS, at_call=0, count=10**6)]).install(srv)
+    got, tickets = _serve_all(srv, queries)
+    np.testing.assert_array_equal(got, want)
+    m = srv.metrics()
+    assert m["health"] == DEGRADED
+    assert all(t.path == "ref" for t in tickets if t.status == "ok")
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        chaos.Fault("nonsense", at_call=0)
+    with pytest.raises(ValueError):
+        chaos.Fault(chaos.OOM, at_call=-1)
+    with pytest.raises(ValueError):
+        chaos.Fault(chaos.OOM, at_call=0, count=0)
+
+
+def test_chaos_wrappers_compose_at_bare_seams(workload):
+    """wrap_step also works at the offline ``stream_batches`` seam — the
+    wrapped step is a drop-in for the jitted step callable."""
+    rects, queries, tree, want = workload
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    eng = beng.BroadcastEngine(tree, mesh, batch_size=64)
+    inj = chaos.ChaosInjector([chaos.Fault(chaos.STRAGGLER, at_call=0,
+                                           count=1, delay_s=0.0)])
+    wrapped = inj.wrap_step(eng._step)
+    got = beng.stream_batches(
+        wrapped, (eng.leaf_coords, eng.rect_tile_mbrs, eng.cover_mbrs),
+        queries[:64], 64, eng._rep_sh)
+    np.testing.assert_array_equal(got, want[:64])
+    assert inj.step_calls == 1 and inj.log == [(0, "straggler")]

@@ -1,0 +1,90 @@
+"""Engine-boundary query validation: every malformed input class is an
+explicit error (or a documented canonicalization), never a silently wrong
+count."""
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import engine as beng
+from repro.core import rtree, subtree
+from repro.core.engine import QueryValidationError, validate_queries
+from repro.data import datasets, spider
+from repro.kernels import ref
+
+
+def _mesh1():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def small_engine():
+    rects = spider.uniform(1000, seed=71, max_size=0.02)
+    tree = rtree.build_str_3level(rects, leaf_capacity=16, fanout=4)
+    return rects, beng.BroadcastEngine(tree, _mesh1(), batch_size=32)
+
+
+@pytest.mark.parametrize("bad", [
+    np.zeros((5, 3), np.int32),                 # wrong trailing dim
+    np.zeros((4,), np.int32),                   # 1-D
+    np.zeros((2, 2, 4), np.int32),              # 3-D
+    np.array([[0, 0, np.nan, 1]]),              # NaN
+    np.array([[0, 0, np.inf, 1]]),              # inf
+    np.array([[0.5, 0, 1, 1]]),                 # fractional float
+    np.array([[0, 0, 2**40, 1]]),               # out of int32 range
+    np.array([[True, False, True, True]]),      # bool dtype
+    np.array([["a", "b", "c", "d"]]),           # string dtype
+])
+def test_validate_queries_rejects(bad):
+    with pytest.raises(QueryValidationError):
+        validate_queries(bad)
+
+
+def test_validate_queries_accepts_integral_floats():
+    q = np.array([[0.0, 0.0, 10.0, 10.0]], np.float64)
+    out = validate_queries(q)
+    assert out.dtype == np.int32
+    np.testing.assert_array_equal(out, [[0, 0, 10, 10]])
+
+
+def test_validate_queries_canonicalizes_flipped():
+    q = np.array([[10, 20, 0, 5]], np.int32)         # lo > hi on both axes
+    out = validate_queries(q)
+    np.testing.assert_array_equal(out, [[0, 5, 10, 20]])
+    with pytest.raises(QueryValidationError):
+        validate_queries(q, strict=True)
+
+
+def test_validate_queries_empty_ok():
+    out = validate_queries(np.zeros((0, 4), np.int64))
+    assert out.shape == (0, 4) and out.dtype == np.int32
+
+
+def test_engine_rejects_malformed(small_engine):
+    _, eng = small_engine
+    with pytest.raises(QueryValidationError):
+        eng.query(np.array([[0, 0, np.nan, 1]]))
+    with pytest.raises(QueryValidationError):
+        eng.query(np.zeros((3, 5), np.int32))
+
+
+def test_subtree_engine_rejects_malformed():
+    rects = spider.gaussian(500, seed=72, max_size=0.02)
+    eng = subtree.SubtreeEngine(rects, _mesh1(), leaf_capacity=32,
+                                batch_size=32)
+    with pytest.raises(QueryValidationError):
+        eng.query(np.array([[0, 0, 1, np.inf]]))
+
+
+def test_flipped_queries_count_like_canonical(small_engine):
+    """Canonicalization is semantic, not cosmetic: a flipped rect counts
+    exactly what its canonical twin counts (the old behavior aliased the
+    EMPTY sentinel and silently returned 0)."""
+    rects, eng = small_engine
+    queries = datasets.make_queries(rects, 0.1, seed=73)
+    flipped = queries.copy()
+    flipped[:, [0, 2]] = flipped[:, [2, 0]]          # swap x corners
+    flipped[:, [1, 3]] = flipped[:, [3, 1]]          # swap y corners
+    got = eng.query(flipped)
+    want = ref.overlap_counts_np(queries, rects)
+    np.testing.assert_array_equal(got, want)
+    assert int(want.sum()) > 0                       # non-trivial workload

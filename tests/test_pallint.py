@@ -25,7 +25,8 @@ def _rules(src, path=SRC_PATH):
 def test_registry_has_full_catalog():
     ids = set(registry())
     assert {"PL101", "PL102", "PL103", "PL104", "PL105", "PL106", "PL107",
-            "PL108", "PL109", "PC201", "PC202", "PC203", "PC204"} <= ids
+            "PL108", "PL109", "PL110", "PC201", "PC202", "PC203",
+            "PC204"} <= ids
 
 
 # --- PL1xx doctrine rules --------------------------------------------------
@@ -141,6 +142,66 @@ def test_pl109_int64_dtype():
           "def f(x):\n"
           "    return x.astype(np.int64)    # pallint: disable=PL109\n")
     assert "PL109" not in _rules(ok)
+
+
+SERVE_PATH = "src/repro/serve/fake.py"   # fake path inside the serve tree
+
+_WHILE_TRUE_NO_EXIT = (
+    "def run(q):\n"
+    "    while True:\n"
+    "        q.pump()\n"
+)
+
+_EXCEPT_CONTINUE = (
+    "def run(q):\n"
+    "    while True:\n"
+    "        try:\n"
+    "            q.pump()\n"
+    "        except RuntimeError:\n"
+    "            continue\n"
+)
+
+
+def test_pl110_while_true_without_exit():
+    assert "PL110" in _rules(_WHILE_TRUE_NO_EXIT, path=SERVE_PATH)
+    # a break makes the loop bounded-by-construction: quiet
+    ok = ("def run(q):\n"
+          "    while True:\n"
+          "        if q.stopped():\n"
+          "            break\n"
+          "        q.pump()\n")
+    assert "PL110" not in _rules(ok, path=SERVE_PATH)
+    # a non-constant condition is already an exit: quiet
+    cond = ("def run(q):\n"
+            "    while not q.stopped():\n"
+            "        q.pump()\n")
+    assert "PL110" not in _rules(cond, path=SERVE_PATH)
+
+
+def test_pl110_except_and_continue_retry():
+    assert "PL110" in _rules(_EXCEPT_CONTINUE, path=SERVE_PATH)
+    # the same retry shape under a bounded for-loop is the sanctioned idiom
+    ok = ("def run(q, tries):\n"
+          "    for attempt in range(tries):\n"
+          "        try:\n"
+          "            return q.pump()\n"
+          "        except RuntimeError:\n"
+          "            continue\n"
+          "    raise TimeoutError\n")
+    assert "PL110" not in _rules(ok, path=SERVE_PATH)
+
+
+def test_pl110_scoped_to_serve_tree():
+    # same patterns outside src/**/serve/: other rules' territory, PL110 quiet
+    assert "PL110" not in _rules(_WHILE_TRUE_NO_EXIT, path=SRC_PATH)
+    assert "PL110" not in _rules(_EXCEPT_CONTINUE, path=TEST_PATH)
+
+
+def test_pl110_suppression():
+    ok = ("def run(q):\n"
+          "    while True:    # pallint: disable=PL110\n"
+          "        q.pump()\n")
+    assert "PL110" not in _rules(ok, path=SERVE_PATH)
 
 
 def test_file_level_suppression():

@@ -1,0 +1,90 @@
+"""Unit tests for the perf-regression gate in benchmarks/regress.py —
+pure comparison logic, no benchmark execution."""
+import json
+
+import pytest
+
+from benchmarks import regress
+
+
+def _report(serving=22.7, bulk=0.85, build=3.8):
+    return {
+        "pipeline": [
+            {"bench": "pipeline_serving", "speedup": serving},
+            {"bench": "pipeline_bulk", "speedup": bulk},
+        ],
+        "build": {"speedup": build},
+    }
+
+
+def test_gate_passes_at_baseline():
+    base = _report()
+    assert regress._regression_failures(_report(), base) == []
+
+
+def test_gate_passes_within_tolerance():
+    base = _report(serving=20.0)
+    ok = _report(serving=20.0 * 0.81)      # -19%: inside the 20% band
+    assert regress._regression_failures(ok, base) == []
+
+
+def test_gate_fails_on_pipeline_drop():
+    base = _report(serving=20.0)
+    bad = _report(serving=20.0 * 0.79)     # -21%: outside the band
+    fails = regress._regression_failures(bad, base)
+    assert len(fails) == 1 and "pipeline_serving" in fails[0]
+
+
+def test_gate_fails_on_build_drop():
+    base = _report(build=4.0)
+    fails = regress._regression_failures(_report(build=2.0), base)
+    assert len(fails) == 1 and fails[0].startswith("build:")
+
+
+def test_gate_reports_every_failing_row():
+    base = _report(serving=20.0, bulk=1.0, build=4.0)
+    bad = _report(serving=10.0, bulk=0.4, build=1.0)
+    assert len(regress._regression_failures(bad, base)) == 3
+
+
+def test_gate_disabled_without_baseline():
+    assert regress._regression_failures(_report(serving=0.01), None) == []
+
+
+def test_gate_ignores_unknown_rows():
+    base = {"pipeline": [{"bench": "pipeline_serving", "speedup": 20.0}]}
+    new = {"pipeline": [{"bench": "pipeline_other", "speedup": 0.1}]}
+    assert regress._regression_failures(new, base) == []
+
+
+def test_load_baseline_roundtrip(tmp_path, monkeypatch):
+    path = tmp_path / "BENCH_pipeline.json"
+    monkeypatch.setattr(regress, "OUT_PATH", str(path))
+    assert regress._load_baseline() is None          # missing file: no gate
+    path.write_text("not json{")
+    assert regress._load_baseline() is None          # unreadable: no gate
+    path.write_text(json.dumps(_report()))
+    assert regress._load_baseline() == _report()
+
+
+def test_gate_and_record_exits_nonzero_and_keeps_baseline(
+        monkeypatch, tmp_path):
+    """A regressing run exits non-zero and must NOT overwrite the committed
+    baseline (no downward ratchet)."""
+    path = tmp_path / "BENCH_pipeline.json"
+    committed = _report(serving=100.0)
+    path.write_text(json.dumps(committed))
+    monkeypatch.setattr(regress, "OUT_PATH", str(path))
+    with pytest.raises(SystemExit) as exc:
+        regress._gate_and_record(_report(serving=1.0))
+    assert "NOT overwritten" in str(exc.value)
+    assert json.loads(path.read_text()) == committed
+
+
+def test_gate_and_record_overwrites_on_pass(monkeypatch, tmp_path):
+    path = tmp_path / "BENCH_pipeline.json"
+    path.write_text(json.dumps(_report(serving=20.0)))
+    monkeypatch.setattr(regress, "OUT_PATH", str(path))
+    improved = _report(serving=25.0)
+    regress._gate_and_record(improved)
+    assert json.loads(path.read_text()) == improved

@@ -1,0 +1,183 @@
+"""Fault-tolerant serving loop: steady-state exactness, admission control,
+deadlines, metrics, and the reference-kernel twin.
+
+The chaos (fault-injection) suite lives in ``tests/test_chaos.py``; this
+file covers the no-fault contract: in healthy steady state the server's
+outputs are bit-equal to ``BroadcastEngine.query``, requests are shed/expired
+explicitly, and the health/metrics surface reports what happened.
+"""
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import engine as beng
+from repro.core import rtree, subtree
+from repro.core.engine import QueryValidationError
+from repro.data import datasets, spider
+from repro.kernels import ref
+from repro.serve.spatial_serve import (
+    DEGRADED, HEALTHY, STATUS_EXPIRED, STATUS_OK, STATUS_SHED,
+    ServeConfig, SpatialServer)
+
+
+def _mesh1():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+class FakeClock:
+    """Deterministic clock + sleep for deadline tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.t += s
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rects = spider.uniform(3000, seed=51, max_size=0.02)
+    queries = datasets.make_queries(rects, 0.2, seed=52)   # 600 queries
+    tree = rtree.build_str_3level(rects, leaf_capacity=32, fanout=8)
+    return rects, queries, tree
+
+
+@pytest.fixture()
+def engine(workload):
+    _, _, tree = workload
+    return beng.BroadcastEngine(tree, _mesh1(), batch_size=64)
+
+
+def test_steady_state_bit_equal_to_engine(workload, engine):
+    """Acceptance: no-fault steady state is bit-equal to the offline path."""
+    rects, queries, _ = workload
+    srv = SpatialServer(engine, ServeConfig(batch_size=64, watchdog_s=30.0))
+    tickets = [srv.submit(q, deadline_s=60.0) for q in queries]
+    srv.drain()
+    got = np.array([t.count for t in tickets], dtype=np.int32)
+    np.testing.assert_array_equal(got, engine.query(queries))
+    np.testing.assert_array_equal(got, ref.overlap_counts_np(queries, rects))
+    assert all(t.status == STATUS_OK and t.path == "fast" for t in tickets)
+    m = srv.metrics()
+    assert m["health"] == HEALTHY
+    assert m["served"] == len(queries) and m["shed"] == 0
+    assert m["retries"] == 0 and m["degradations"] == 0
+
+
+def test_serves_subtree_engine_too(workload):
+    """The server binds to either engine — same step arity, same contract."""
+    rects, queries, _ = workload
+    eng = subtree.SubtreeEngine(rects, _mesh1(), leaf_capacity=64,
+                                batch_size=64)
+    srv = SpatialServer(eng, ServeConfig(batch_size=64, watchdog_s=30.0,
+                                         sort_batches=False))
+    tickets = [srv.submit(q, deadline_s=60.0) for q in queries[:100]]
+    srv.drain()
+    got = np.array([t.count for t in tickets], dtype=np.int32)
+    np.testing.assert_array_equal(
+        got, ref.overlap_counts_np(queries[:100], rects))
+
+
+def test_capacity_shedding(engine):
+    srv = SpatialServer(engine, ServeConfig(batch_size=64, max_queue=4),
+                        warmup=False)
+    rect = np.array([0, 0, 10, 10], np.int32)
+    tickets = [srv.submit(rect) for _ in range(7)]
+    shed = [t for t in tickets if t.status == STATUS_SHED]
+    assert len(shed) == 3 and all(t.reason == "capacity" for t in shed)
+    assert all(t.done for t in shed)       # shed tickets complete immediately
+    m = srv.metrics()
+    assert m["shed"] == 3 and 0 < m["shed_rate"] < 1
+    assert m["queue_depth"] == 4
+
+
+def test_deadline_admission_shed(engine):
+    """With a known batch-latency EWMA, a request whose deadline cannot be
+    met is refused at admission instead of queued to die."""
+    clk = FakeClock()
+    srv = SpatialServer(engine, ServeConfig(batch_size=64),
+                        clock=clk, sleep=clk.sleep, warmup=False)
+    srv._batch_ewma_s = 10.0               # measured-latency stand-in
+    rect = np.array([0, 0, 10, 10], np.int32)
+    t_ok = srv.submit(rect, deadline_s=100.0)
+    t_no = srv.submit(rect, deadline_s=0.5)
+    assert t_ok.status != STATUS_SHED
+    assert t_no.status == STATUS_SHED and t_no.reason == "deadline"
+
+
+def test_expired_in_queue(engine):
+    """Requests whose deadline passes while queued are expired at batch
+    formation, never silently served late."""
+    clk = FakeClock()
+    srv = SpatialServer(engine, ServeConfig(batch_size=64),
+                        clock=clk, sleep=clk.sleep)
+    rect = np.array([0, 0, 10, 10], np.int32)
+    t1 = srv.submit(rect, deadline_s=0.5)
+    t2 = srv.submit(rect, deadline_s=100.0)
+    clk.t += 1.0
+    srv.pump()
+    assert t1.status == STATUS_EXPIRED and t1.done
+    assert t2.status == STATUS_OK
+    assert srv.metrics()["expired"] == 1
+
+
+def test_submit_validates_strictly(engine):
+    srv = SpatialServer(engine, warmup=False)
+    with pytest.raises(QueryValidationError):
+        srv.submit(np.array([10, 10, 0, 0], np.int32))     # lo > hi: refused
+    with pytest.raises(QueryValidationError):
+        srv.submit(np.array([np.nan, 0.0, 1.0, 1.0]))
+    with pytest.raises(QueryValidationError):
+        srv.submit(np.array([1, 2, 3], np.int32))          # wrong shape
+
+
+def test_background_worker_thread(workload, engine):
+    rects, queries, _ = workload
+    srv = SpatialServer(engine, ServeConfig(batch_size=64, watchdog_s=30.0))
+    srv.start()
+    try:
+        tickets = [srv.submit(q, deadline_s=60.0) for q in queries[:200]]
+        assert all(t.wait(timeout=60.0) for t in tickets)
+    finally:
+        srv.stop()
+    got = np.array([t.count for t in tickets], dtype=np.int32)
+    np.testing.assert_array_equal(
+        got, ref.overlap_counts_np(queries[:200], rects))
+    assert srv.submit(np.array([0, 0, 1, 1])).status == STATUS_SHED  # stopped
+
+
+def test_metrics_latency_percentiles(workload, engine):
+    _, queries, _ = workload
+    srv = SpatialServer(engine, ServeConfig(batch_size=64, watchdog_s=30.0))
+    for q in queries[:128]:
+        srv.submit(q, deadline_s=60.0)
+    srv.drain()
+    m = srv.metrics()
+    assert m["batch_p50_s"] is not None and m["batch_p99_s"] is not None
+    assert m["batch_p50_s"] <= m["batch_p99_s"]
+    assert m["request_p50_s"] is not None
+    assert m["request_p50_s"] <= m["request_p99_s"]
+
+
+def test_ref_chunked_twin_matches_loop_oracle():
+    """The degraded path's vectorized kernel is exact vs the per-query
+    oracle, across chunk boundaries and EMPTY padding."""
+    rects = spider.gaussian(700, seed=53, max_size=0.02)
+    queries = datasets.make_queries(rects, 0.5, seed=54)   # 350 queries
+    want = ref.overlap_counts_np(queries, rects)
+    for chunk in (1, 7, 256, 1000):
+        got = ref.overlap_counts_np_chunked(queries, rects, chunk=chunk)
+        np.testing.assert_array_equal(got, want)
+    assert got.dtype == np.int32
+
+
+def test_degraded_state_constant(engine):
+    """HEALTHY/DEGRADED markers round-trip through the metrics surface."""
+    srv = SpatialServer(engine, warmup=False)
+    assert srv.metrics()["health"] == HEALTHY
+    srv._degrade(RuntimeError("forced"))
+    assert srv.metrics()["health"] == DEGRADED
+    assert srv.metrics()["degradations"] == 1
