@@ -48,3 +48,21 @@ def emit(name: str, seconds: float, derived: str = "") -> None:
 
 def mesh1():
     return compat.make_mesh((1, 1), ("data", "model"))
+
+
+def bench_step(eng):
+    """Measurement bindings for either engine: a *non-donating* query step
+    plus its placed operands and the replicated query sharding.
+
+    Non-donating so one staged batch can be reused across timing repeats —
+    what :func:`repro.obs.phases.measure_query_phases` requires.  Works for
+    ``BroadcastEngine`` and ``SubtreeEngine`` (same step arity)."""
+    if hasattr(eng, "leaf_coords"):             # BroadcastEngine
+        from repro.core import engine as beng
+        step = beng.make_query_step(eng.mesh, donate_queries=False)
+        operands = (eng.leaf_coords, eng.rect_tile_mbrs, eng.cover_mbrs)
+    else:                                       # SubtreeEngine
+        from repro.core import subtree
+        step = subtree.make_query_step(eng.mesh, donate_queries=False)
+        operands = (eng.dev_coords, eng.dev_tile_mbrs, eng.dev_mbrs)
+    return step, operands, eng._rep_sh

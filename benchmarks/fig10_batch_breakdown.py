@@ -3,19 +3,22 @@ execution, result retrieval.
 
 The paper's point: in the broadcast design the kernel dominates each batch
 and communication is a thin slice.  Per-batch transfer volumes are exact
-(batch × 16 B queries in, batch × 4 B counts out); kernel time is measured;
-transfer times are modeled at UPMEM host-bandwidth and at TPU ICI bandwidth.
+(batch × 16 B queries in, batch × 4 B counts out); the measured slices come
+from the shared blocking harness
+(:func:`repro.obs.phases.measure_query_phases` — the same helper
+``benchmarks/regress.py`` records into ``BENCH_pipeline.json``, so the two
+reports agree by construction); transfer times are additionally modeled at
+UPMEM host-bandwidth and at TPU ICI bandwidth.
 """
 from __future__ import annotations
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-
 from benchmarks import common
-from repro.core import engine, rtree
+from repro.core import rtree
+from repro.core import engine
 from repro.data import datasets
+from repro.obs import phases as obs_phases
 
 HOST_BW = 8e9
 ICI_BW = 50e9
@@ -36,26 +39,26 @@ def run(full: bool = False) -> list[dict]:
         batch = np.concatenate([batch, np.tile(
             [2**31 - 1, 2**31 - 1, -2**31, -2**31],
             (10_000 - batch.shape[0], 1)).astype(np.int32)])
-    # a non-donating step isolates pure kernel time: one staged batch is
-    # reused across repeats, so no host→device staging pollutes the slice
-    step = engine.make_query_step(eng.mesh, donate_queries=False)
-    dev_batch = jax.device_put(batch, eng._rep_sh)
-    t_kernel = common.time_fn(
-        lambda: step(eng.leaf_coords, eng.rect_tile_mbrs, eng.cover_mbrs,
-                     dev_batch))
+    step, operands, rep_sh = common.bench_step(eng)
+    slices = obs_phases.measure_query_phases(step, operands, batch, rep_sh)
+    t_kernel = slices["kernel_s"]
     q_bytes = batch.nbytes
     r_bytes = batch.shape[0] * 4
     t_q_upmem, t_r_upmem = q_bytes / HOST_BW, r_bytes / HOST_BW
     t_q_tpu, t_r_tpu = q_bytes / ICI_BW, r_bytes / ICI_BW
 
     common.emit("fig10/lakes/query_transfer", t_q_upmem,
-                f"bytes={q_bytes} tpu_s={t_q_tpu:.2e}")
+                f"bytes={q_bytes} tpu_s={t_q_tpu:.2e} "
+                f"measured_s={slices['h2d_s']:.2e}")
     common.emit("fig10/lakes/kernel", t_kernel,
                 f"fraction={t_kernel/(t_kernel+t_q_upmem+t_r_upmem):.3f}")
     common.emit("fig10/lakes/result_retrieval", t_r_upmem,
-                f"bytes={r_bytes} tpu_s={t_r_tpu:.2e}")
+                f"bytes={r_bytes} tpu_s={t_r_tpu:.2e} "
+                f"measured_s={slices['d2h_s']:.2e}")
     return [dict(query_transfer_s=t_q_upmem, kernel_s=t_kernel,
-                 result_s=t_r_upmem)]
+                 result_s=t_r_upmem,
+                 h2d_measured_s=slices["h2d_s"],
+                 d2h_measured_s=slices["d2h_s"])]
 
 
 if __name__ == "__main__":

@@ -37,6 +37,8 @@ from repro.core import rtree
 from repro.core.types import EMPTY_RECT, SerializedRTree, mbr_of
 from repro.data import datasets, spider
 from repro.kernels import ref as kref
+from repro.obs import phases as obs_phases
+from repro.obs import trace as obs_trace
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_pipeline.json")
@@ -287,17 +289,19 @@ def run(full: bool = False) -> list[dict]:
     report["tile_sweep"] = tile_rows
 
     # --- fig10-style batch breakdown on the synthetic workload ------------
+    # Blocking per-batch slices from the shared obs harness (the same
+    # helper fig10_batch_breakdown.py uses, so the numbers agree by
+    # construction); UPMEM/ICI transfer slices stay modeled.
     bs = 4096
     batch = np.asarray(queries[:bs], np.int32)
-    # non-donating step + one staged batch: pure kernel time, no H2D staging
-    step = beng.make_query_step(mesh, donate_queries=False)
-    dev_batch = jax.device_put(batch, eng._rep_sh)
-    t_kernel = common.time_fn(
-        lambda: step(eng.leaf_coords, eng.rect_tile_mbrs, eng.cover_mbrs,
-                     dev_batch))
+    step, operands, rep_sh = common.bench_step(eng)
+    slices = obs_phases.measure_query_phases(step, operands, batch, rep_sh)
+    t_kernel = slices["kernel_s"]
     q_bytes, r_bytes = batch.nbytes, batch.shape[0] * 4
     report["batch_breakdown"] = dict(
         batch_size=bs, kernel_s=t_kernel,
+        h2d_measured_s=slices["h2d_s"],
+        d2h_measured_s=slices["d2h_s"],
         query_transfer_upmem_s=q_bytes / HOST_BW,
         result_retrieval_upmem_s=r_bytes / HOST_BW,
         query_transfer_tpu_s=q_bytes / ICI_BW,
@@ -306,8 +310,56 @@ def run(full: bool = False) -> list[dict]:
     common.emit("regress/batch_breakdown/kernel", t_kernel,
                 f"batch={bs}")
 
+    report["phases"] = _phase_accounting(rects, queries, mesh, n, nq)
+
     _gate_and_record(report)
     return [report]
+
+
+def _phase_accounting(rects, queries, mesh, n, nq) -> dict:
+    """One traced end-to-end pipeline run folded into Fig-10 fractions.
+
+    Build + placement + a steady-state streamed run are traced through the
+    global tracer (DESIGN.md Sec 12); the pipelined stream hides kernel wait
+    in its end-of-set sync, so per-batch device slices come from the blocking
+    harness and :func:`repro.obs.phases.compose_pipeline` folds both views
+    into end-to-end fractions.  The compile happens on an untraced warmup
+    call so jit time never pollutes the breakdown.
+    """
+    bs = 256
+    tracer = obs_trace.get_tracer()
+    tracer.reset()
+    tracer.enable()
+    tree = rtree.build_str_3level(rects, *rtree.choose_parameters(n, 1))
+    eng = beng.BroadcastEngine(tree, mesh, batch_size=bs)
+    tracer.disable()
+    eng.query(queries[:bs])                     # untraced warmup: jit compile
+    tracer.enable()
+    t0 = time.perf_counter()
+    eng.query(queries)
+    stream_wall_s = time.perf_counter() - t0
+    step, operands, rep_sh = common.bench_step(eng)
+    per_batch = obs_phases.measure_query_phases(
+        step, operands, np.asarray(queries[:bs], np.int32), rep_sh)
+    tracer.disable()
+    events = tracer.events()
+    composed = obs_phases.compose_pipeline(
+        build_s=obs_phases.span_seconds(events, "build_str_3level"),
+        place_s=obs_phases.span_seconds(events, "place"),
+        per_batch=per_batch,
+        num_batches=math.ceil(nq / bs),
+        stream_wall_s=stream_wall_s)
+    fr = composed["fractions"]
+    common.emit("regress/phases/pipeline", 0.0,
+                f"build={fr['build']:.3f} h2d={fr['h2d']:.3f} "
+                f"kernel={fr['kernel']:.3f} d2h={fr['d2h']:.3f} "
+                f"host={fr['host']:.3f}")
+    return dict(
+        batch_size=bs,
+        breakdown=obs_phases.breakdown(events),
+        per_batch=per_batch,
+        pipeline=composed,
+        derived=obs_phases.derived_stats(eng.layout, nq, bs))
 
 
 def _gate_and_record(report: dict) -> None:

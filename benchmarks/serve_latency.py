@@ -26,6 +26,8 @@ from benchmarks import common
 from repro.core import engine as beng
 from repro.core import rtree
 from repro.data import datasets, spider
+from repro.obs import phases as obs_phases
+from repro.obs import trace as obs_trace
 from repro.serve.spatial_serve import ServeConfig, SpatialServer
 from repro.testing import chaos
 
@@ -101,6 +103,14 @@ def _summarize(label: str, srv: SpatialServer, tickets: list,
         p90_ms=float(np.percentile(lat, 90) * 1e3) if len(lat) else None,
         p99_ms=float(np.percentile(lat, 99) * 1e3) if len(lat) else None,
         max_ms=float(lat.max() * 1e3) if len(lat) else None,
+        # the server's own histogram-estimated percentiles (interpolated,
+        # fixed buckets) alongside the exact per-ticket numbers above
+        hist_request_p50_ms=(m["request_p50_s"] * 1e3
+                             if m["request_p50_s"] is not None else None),
+        hist_request_p99_ms=(m["request_p99_s"] * 1e3
+                             if m["request_p99_s"] is not None else None),
+        queue_wait_p50_ms=(m["queue_wait_p50_s"] * 1e3
+                           if m["queue_wait_p50_s"] is not None else None),
     )
     common.emit(f"serve_latency/{label}/p50",
                 (row["p50_ms"] or 0.0) / 1e3,
@@ -125,10 +135,18 @@ def run(full: bool = False) -> list[dict]:
         arrival="poisson", rate_qps=ARRIVAL_RATE_QPS,
         deadline_s=DEADLINE_S)}
 
+    # Trace the clean run (server construction/warmup stays untraced so
+    # compile time never pollutes the breakdown): serve.form_batch spans on
+    # the pump thread, serve.batch → stage/step/retrieve on the pool thread.
     srv = SpatialServer(beng.BroadcastEngine(tree, common.mesh1(),
                                              batch_size=cfg.batch_size), cfg)
-    report["clean"] = _summarize(
-        "clean", srv, _drive(srv, queries, arrivals), want)
+    tracer = obs_trace.get_tracer()
+    tracer.reset()
+    tracer.enable()
+    tickets = _drive(srv, queries, arrivals)
+    tracer.disable()
+    report["clean"] = _summarize("clean", srv, tickets, want)
+    report["phases"] = obs_phases.breakdown(tracer.events())
 
     srv = SpatialServer(beng.BroadcastEngine(tree, common.mesh1(),
                                              batch_size=cfg.batch_size), cfg)

@@ -18,6 +18,7 @@ from benchmarks import common
 from repro.core import engine, rtree
 from repro.data import datasets
 from repro.kernels import ops, ref
+from repro.obs import phases as obs_phases
 
 
 def run(full: bool = False) -> list[dict]:
@@ -42,10 +43,14 @@ def run(full: bool = False) -> list[dict]:
     nodes_visited = nq * (layout.leaves_per_device * layout.num_devices
                           + layout.kmax * layout.num_devices)
 
-    # measured per-device kernel time at this scale (one device's slice)
+    # measured per-device kernel time at this scale (one device's slice),
+    # via the shared blocking harness (median over repeats, traced as a
+    # single synthesized kernel span when the tracer is on)
     local = jnp.asarray(layout.leaf_rects_flat[: layout.rects_per_device])
     q = jnp.asarray(queries[:10_000])
-    t_dev = common.time_fn(lambda: ops.overlap_counts(q, local, impl="xla"))
+    t_dev = obs_phases.measure(
+        lambda: ops.overlap_counts(q, local, impl="xla"),
+        name="table4_per_device_kernel", phase=obs_phases.KERNEL)
     dev_bytes = local.nbytes * 1  # streamed once per batch
     attained_bw = dev_bytes / t_dev
 

@@ -19,6 +19,13 @@ GR302 (implicit transfer).  Exposed as a pytest fixture
 (``python -m repro.analysis.pallint --guards``), which drives the public
 jitted entrypoints — broadcast engine step, subtree engine step, and the
 serve-loop decode step — through warmup + guarded steady state.
+
+Every guarded region also exports into the process-default metrics registry
+(:func:`repro.obs.metrics.get_registry`): ``pallint_recompiles_total`` /
+``pallint_implicit_transfers_total`` count violations by ``where``, and
+``pallint_compile_count{entrypoint=...}`` gauges the cached specialization
+count observed on exit — so a scrape shows guard health alongside the
+serving metrics without a second plumbing layer.
 """
 from __future__ import annotations
 
@@ -28,6 +35,12 @@ from typing import Callable
 import jax
 
 from repro.analysis.pallint.core import Finding
+
+
+def _guard_registry():
+    """The default obs registry (lazy import: guards must not force obs)."""
+    from repro.obs import metrics as obs_metrics
+    return obs_metrics.get_registry()
 
 
 class GuardViolation(AssertionError):
@@ -80,12 +93,23 @@ def steady_state(entrypoints: dict[str, object] | None = None,
             yield
     except Exception as e:  # re-badge jax's transfer error with the rule ID
         if "transfer" in str(e).lower() and "disallow" in str(e).lower():
+            _guard_registry().counter(
+                "pallint_implicit_transfers_total",
+                "GR302 implicit device->host transfers caught by the "
+                "trace guard").inc(where=where)
             raise GuardViolation([Finding(
                 "GR302", where, 0,
                 f"implicit device->host transfer in steady state: {e}")]
             ) from e
         raise
     after = _snapshot(watch)
+    reg = _guard_registry()
+    compile_gauge = reg.gauge(
+        "pallint_compile_count",
+        "cached jit specializations per guarded entrypoint")
+    for name, count in after.items():
+        if count is not None:
+            compile_gauge.set(count, entrypoint=name)
     grew = [
         Finding("GR301", where, 0,
                 f"{name!r} recompiled in steady state "
@@ -95,6 +119,10 @@ def steady_state(entrypoints: dict[str, object] | None = None,
         and after[name] > before[name]
     ]
     if grew:
+        reg.counter(
+            "pallint_recompiles_total",
+            "GR301 steady-state recompiles caught by the trace guard"
+        ).inc(len(grew), where=where)
         raise GuardViolation(grew)
 
 

@@ -35,6 +35,13 @@ PL110 unbounded-serve-loop    in serving code (``repro/serve/``): ``while
                               range(n)``, a watchdog, or a real loop
                               condition) — an always-on serving loop must
                               shed or degrade, never hang.
+PL111 hot-path-wall-clock-io  in hot-path modules (``repro/core/``,
+                              ``repro/serve/``, ``repro/kernels/``): no
+                              direct ``time.time()`` (wall clock drifts and
+                              jumps; timing goes through ``time.monotonic*``
+                              or the ``repro.obs`` tracer) and no ``print()``
+                              (output goes through metrics/trace, never
+                              stdout on the hot path).
 
 Detection of "jit-compiled or kernel-adjacent" (PL101): a function is a jit
 context if (a) a decorator references ``jit``, (b) its name is passed as the
@@ -372,6 +379,31 @@ def check_unbounded_serve_loop(tree, src, path):
                             "except-and-continue inside while True — retry "
                             "forever with no deadline/attempt bound")
                     break
+
+
+@register("PL111", SCOPE_SRC,
+          "hot-path modules (core/serve/kernels) must not call time.time() "
+          "or print() directly — use monotonic clocks and the obs layer")
+def check_hot_path_wall_clock_io(tree, src, path):
+    parts = os.path.normpath(path).split(os.sep)
+    if not any(p in ("core", "serve", "kernels") for p in parts):
+        return
+    info = ModuleInfo(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func, info.aliases)
+        if d == "time.time":
+            yield Finding(
+                "PL111", path, node.lineno,
+                "time.time() in a hot-path module — the wall clock drifts "
+                "and jumps; use time.monotonic()/monotonic_ns() or the "
+                "repro.obs tracer")
+        elif isinstance(node.func, ast.Name) and node.func.id == "print":
+            yield Finding(
+                "PL111", path, node.lineno,
+                "print() in a hot-path module — emit through repro.obs "
+                "metrics/trace, never stdout on the hot path")
 
 
 @register("PL109", SCOPE_SRC,

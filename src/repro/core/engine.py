@@ -45,6 +45,8 @@ import numpy as np
 from repro import compat
 from repro.core.types import EMPTY_RECT, SerializedRTree, mbr_of
 from repro.kernels import ops
+from repro.obs import phases as obs_phases
+from repro.obs import trace as obs_trace
 
 DEFAULT_BATCH = 10_000  # paper: "queries are processed in batches of up to 10,000"
 
@@ -167,6 +169,12 @@ def shard_tree(
     padded to a tile multiple and the leaf-tile MBR / occupancy tables are
     precomputed — the placement-time half of the device-resident pipeline.
     """
+    with obs_trace.span("shard_tree", phase=obs_phases.BUILD,
+                        devices=int(num_devices), tile=tile):
+        return _shard_tree_inner(tree, num_devices, tile)
+
+
+def _shard_tree_inner(tree, num_devices, tile):
     d = int(num_devices)
     leaf_rects = np.asarray(tree.leaf_rects)           # (L, B, 4)
     l, b, _ = leaf_rects.shape
@@ -311,6 +319,15 @@ def stream_batches(
     query buffers are donated by the step and host references dropped as soon
     as each dispatch is issued.  Results are synced once at the end instead
     of per batch.
+
+    Tracing (DESIGN.md Sec 12): with the tracer enabled each batch records a
+    ``stage`` (h2d) and ``dispatch`` (kernel) span and the loop ends with one
+    ``sync_retrieve`` (d2h) span.  Because dispatch is asynchronous, the
+    dispatch spans measure *host dispatch cost only* — device kernel wait is
+    absorbed by the end-of-set sync span by design.  Fig-10-style kernel
+    slices come from the blocking harness
+    (:func:`repro.obs.phases.measure_query_phases`), not from this loop.
+    Disabled tracing costs one attribute check per span site.
     """
     queries = np.asarray(queries, dtype=np.int32)
     q = queries.shape[0]
@@ -318,31 +335,42 @@ def stream_batches(
         return np.empty(0, dtype=np.int32)
     bs = int(batch_size)
     nb = math.ceil(q / bs)
-    pad = nb * bs - q
-    if pad:
-        queries = np.concatenate([queries, np.tile(EMPTY_RECT, (pad, 1))])
-    batches = queries.reshape(nb, bs, 4)
+    with obs_trace.span("stream_batches", phase=obs_phases.HOST,
+                        batches=nb, batch_size=bs, queries=q):
+        pad = nb * bs - q
+        if pad:
+            queries = np.concatenate([queries, np.tile(EMPTY_RECT, (pad, 1))])
+        batches = queries.reshape(nb, bs, 4)
 
-    outs = []
-    staged = jax.device_put(batches[0], rep_sharding)
-    with warnings.catch_warnings():
-        # The step donates its query buffer (a liveness hint); the (Q,)
-        # count output can never alias the (Q, 4) input, so XLA's compile
-        # advises the donation is unusable for aliasing — expected here,
-        # and suppressed only for this loop, not process-wide.
-        warnings.filterwarnings(
-            "ignore", message="Some donated buffers were not usable")
-        for i in range(nb):
-            nxt = (jax.device_put(batches[i + 1], rep_sharding)
-                   if i + 1 < nb else None)
-            outs.append(step(*operands, staged))
-            staged = nxt              # drop our reference to the donated buffer
-    # The one sanctioned host sync of the hot path: a single end-of-set
-    # barrier plus an *explicit* device→host retrieval (jax.device_get), so
-    # the whole loop runs clean under the pallint trace guard's
-    # transfer_guard_device_to_host("disallow").
-    jax.block_until_ready(outs)    # pallint: disable=PL102
-    return np.concatenate(jax.device_get(outs))[:q]
+        outs = []
+        with obs_trace.span("stage", phase=obs_phases.H2D, batch=0):
+            staged = jax.device_put(batches[0], rep_sharding)
+        with warnings.catch_warnings():
+            # The step donates its query buffer (a liveness hint); the (Q,)
+            # count output can never alias the (Q, 4) input, so XLA's compile
+            # advises the donation is unusable for aliasing — expected here,
+            # and suppressed only for this loop, not process-wide.
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            for i in range(nb):
+                if i + 1 < nb:
+                    with obs_trace.span("stage", phase=obs_phases.H2D,
+                                        batch=i + 1):
+                        nxt = jax.device_put(batches[i + 1], rep_sharding)
+                else:
+                    nxt = None
+                with obs_trace.span("dispatch", phase=obs_phases.KERNEL,
+                                    batch=i):
+                    outs.append(step(*operands, staged))
+                staged = nxt          # drop our reference to the donated buffer
+        # The one sanctioned host sync of the hot path: a single end-of-set
+        # barrier plus an *explicit* device→host retrieval (jax.device_get),
+        # so the whole loop runs clean under the pallint trace guard's
+        # transfer_guard_device_to_host("disallow").
+        with obs_trace.span("sync_retrieve", phase=obs_phases.D2H,
+                            result_bytes=q * 4):
+            jax.block_until_ready(outs)    # pallint: disable=PL102
+            return np.concatenate(jax.device_get(outs))[:q]
 
 
 class BroadcastEngine:
@@ -378,11 +406,21 @@ class BroadcastEngine:
         # one-time placement (paper Sec III-C.3): leaf scatter + header
         # broadcast + the tile-metadata cache — nothing below is touched
         # again until the tree changes.
-        self.leaf_coords = jax.device_put(
-            np.ascontiguousarray(self.layout.leaf_rects_flat.T), coords_sh)
-        self.rect_tile_mbrs = jax.device_put(
-            self.layout.rect_tile_mbrs, meta_sh)
-        self.cover_mbrs = jax.device_put(self.layout.cover_mbrs, meta_sh)
+        with obs_trace.span(
+                "place", phase=obs_phases.H2D,
+                leaf_bytes=int(self.layout.leaf_bytes),
+                metadata_bytes=int(self.layout.metadata_bytes),
+                header_bytes=int(self.layout.header_bytes)):
+            self.leaf_coords = jax.device_put(
+                np.ascontiguousarray(self.layout.leaf_rects_flat.T), coords_sh)
+            self.rect_tile_mbrs = jax.device_put(
+                self.layout.rect_tile_mbrs, meta_sh)
+            self.cover_mbrs = jax.device_put(self.layout.cover_mbrs, meta_sh)
+            if obs_trace.enabled():
+                # only when tracing: make the placement span measure the
+                # actual transfer, not just the async dispatch
+                jax.block_until_ready(             # pallint: disable=PL102
+                    (self.leaf_coords, self.rect_tile_mbrs, self.cover_mbrs))
         self._rep_sh = rep_sh
 
         def _count_trace():
@@ -393,12 +431,14 @@ class BroadcastEngine:
 
     def query(self, queries: np.ndarray) -> np.ndarray:
         """Batched range-query counts (paper Sec III-C.4/5)."""
-        queries = validate_queries(queries, where="BroadcastEngine.query")
-        if self.sort_queries:
-            order = morton_order(queries)
-            inv = np.argsort(order, kind="stable")
-            return self._query_inner(queries[order])[inv]
-        return self._query_inner(queries)
+        with obs_trace.span("broadcast.query", phase=obs_phases.HOST,
+                            queries=int(np.asarray(queries).shape[0])):
+            queries = validate_queries(queries, where="BroadcastEngine.query")
+            if self.sort_queries:
+                order = morton_order(queries)
+                inv = np.argsort(order, kind="stable")
+                return self._query_inner(queries[order])[inv]
+            return self._query_inner(queries)
 
     def _query_inner(self, queries: np.ndarray) -> np.ndarray:
         return stream_batches(

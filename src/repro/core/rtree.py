@@ -23,6 +23,8 @@ import math
 import numpy as np
 
 from repro.core.types import EMPTY_RECT, SerializedRTree, TopDownNode, mbr_of
+from repro.obs import phases as obs_phases
+from repro.obs import trace as obs_trace
 
 
 def _validate_rects(rects: np.ndarray) -> np.ndarray:
@@ -103,6 +105,14 @@ def build_str_3level(
     contiguous leaf range starting at ``l1_child_start[i]`` — the layout the
     paper broadcasts (prefix) and partitions (leaf level).
     """
+    with obs_trace.span("build_str_3level", phase=obs_phases.BUILD,
+                        rects=int(np.asarray(rects).shape[0]),
+                        leaf_capacity=int(leaf_capacity),
+                        fanout=int(fanout)):
+        return _build_str_3level_inner(rects, leaf_capacity, fanout)
+
+
+def _build_str_3level_inner(rects, leaf_capacity, fanout):
     rects = _validate_rects(rects)
     n = rects.shape[0]
     b, f = int(leaf_capacity), int(fanout)

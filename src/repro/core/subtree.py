@@ -36,6 +36,8 @@ from repro.core import rtree
 from repro.core.engine import stream_batches, validate_queries
 from repro.core.types import EMPTY_RECT, TopDownNode, mbr_of
 from repro.kernels import ops
+from repro.obs import phases as obs_phases
+from repro.obs import trace as obs_trace
 
 
 def _collect_rects(node: TopDownNode) -> np.ndarray:
@@ -64,6 +66,13 @@ def build_layout(
     rects: np.ndarray, num_devices: int, leaf_capacity: int,
     *, tile: int | None = None,
 ) -> SubtreeLayout:
+    with obs_trace.span("build_layout", phase=obs_phases.BUILD,
+                        rects=int(np.asarray(rects).shape[0]),
+                        devices=int(num_devices), tile=tile):
+        return _build_layout_inner(rects, num_devices, leaf_capacity, tile)
+
+
+def _build_layout_inner(rects, num_devices, leaf_capacity, tile):
     root = rtree.build_fanout_constrained(rects, num_devices, leaf_capacity)
     subs = rtree.subtree_partitions(root, num_devices)
     per_dev = [_collect_rects(s) for s in subs]
@@ -163,12 +172,20 @@ class SubtreeEngine:
             mesh, jax.sharding.PartitionSpec(axes))
         self._rep_sh = jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec())
-        self.dev_coords = jax.device_put(
-            np.ascontiguousarray(self.layout.rects.reshape(-1, 4).T),
-            coords_sh)
-        self.dev_tile_mbrs = jax.device_put(
-            self.layout.rect_tile_mbrs, shard_sh)
-        self.dev_mbrs = jax.device_put(self.layout.root_mbrs, shard_sh)
+        with obs_trace.span(
+                "place", phase=obs_phases.H2D,
+                scatter_bytes=int(self.layout.scatter_bytes)):
+            self.dev_coords = jax.device_put(
+                np.ascontiguousarray(self.layout.rects.reshape(-1, 4).T),
+                coords_sh)
+            self.dev_tile_mbrs = jax.device_put(
+                self.layout.rect_tile_mbrs, shard_sh)
+            self.dev_mbrs = jax.device_put(self.layout.root_mbrs, shard_sh)
+            if obs_trace.enabled():
+                # only when tracing: charge the actual transfer to the span,
+                # not just the async dispatch
+                jax.block_until_ready(             # pallint: disable=PL102
+                    (self.dev_coords, self.dev_tile_mbrs, self.dev_mbrs))
 
         def _count_trace():
             self.trace_count += 1
@@ -177,12 +194,14 @@ class SubtreeEngine:
             mesh, impl=impl, tq=tq, tr=tr, on_trace=_count_trace)
 
     def query(self, queries: np.ndarray) -> np.ndarray:
-        queries = validate_queries(queries, where="SubtreeEngine.query")
-        return stream_batches(
-            self._step,
-            (self.dev_coords, self.dev_tile_mbrs, self.dev_mbrs),
-            queries, self.batch_size, self._rep_sh,
-        )
+        with obs_trace.span("subtree.query", phase=obs_phases.HOST,
+                            queries=int(np.asarray(queries).shape[0])):
+            queries = validate_queries(queries, where="SubtreeEngine.query")
+            return stream_batches(
+                self._step,
+                (self.dev_coords, self.dev_tile_mbrs, self.dev_mbrs),
+                queries, self.batch_size, self._rep_sh,
+            )
 
     def transfer_stats(self, num_queries: int) -> dict[str, int]:
         """The paper observed "repeated subtree transfers and per-DPU data

@@ -120,7 +120,8 @@ def overlap_counts(
     mask = mask.astype(jnp.int32)
 
     if impl == "xla":
-        return _xla_counts(queries, rects, mask, tq, tr)
+        with jax.named_scope("overlap_counts_xla"):
+            return _xla_counts(queries, rects, mask, tq, tr)
 
     qp = pad_rects_to(queries, tq)
     rp = pad_rects_to(rects, tr)
@@ -130,16 +131,18 @@ def overlap_counts(
     qmbrs = tile_mbrs(qp, tq)
     rmbrs = tile_mbrs(rp, tr)
     if impl == "sparse":
-        nactive, tile_ids = build_active_tiles_device(qmbrs, rmbrs)
-        out = rk.overlap_counts_sparse(
-            q_coords, r_coords, maskp, nactive, tile_ids,
-            tq=tq, tr=tr, interpret=_INTERPRET,
-        )
+        with jax.named_scope("overlap_counts_sparse"):
+            nactive, tile_ids = build_active_tiles_device(qmbrs, rmbrs)
+            out = rk.overlap_counts_sparse(
+                q_coords, r_coords, maskp, nactive, tile_ids,
+                tq=tq, tr=tr, interpret=_INTERPRET,
+            )
     else:
-        out = rk.overlap_counts_tiled(
-            q_coords, r_coords, qmbrs, rmbrs, maskp,
-            tq=tq, tr=tr, interpret=_INTERPRET,
-        )
+        with jax.named_scope("overlap_counts_tiled"):
+            out = rk.overlap_counts_tiled(
+                q_coords, r_coords, qmbrs, rmbrs, maskp,
+                tq=tq, tr=tr, interpret=_INTERPRET,
+            )
     return out[:q]
 
 
@@ -168,25 +171,28 @@ def overlap_counts_fused(
     if q == 0:        # empty batch: a zero-extent grid has no tile to load
         return jnp.zeros((0,), jnp.int32)
     if impl == "xla":
-        mask = ref.rect_overlap(
-            queries[:, None, :], cover_mbrs[None, :, :]).any(axis=1)
-        return ref.masked_overlap_counts_ref(queries, mask, r_coords.T)
+        with jax.named_scope("overlap_counts_fused_xla"):
+            mask = ref.rect_overlap(
+                queries[:, None, :], cover_mbrs[None, :, :]).any(axis=1)
+            return ref.masked_overlap_counts_ref(queries, mask, r_coords.T)
 
     qp = pad_rects_to(queries, tq)
     q_coords = qp.T
     qmbrs = tile_mbrs(qp, tq)
     if impl == "sparse":
-        nactive, tile_ids = build_active_tiles_device(
-            qmbrs, r_tile_mbrs, cover_mbrs)
-        out = rk.overlap_counts_sparse_fused(
-            q_coords, r_coords, cover_mbrs, nactive, tile_ids,
-            tq=tq, tr=tr, interpret=_INTERPRET,
-        )
+        with jax.named_scope("overlap_counts_fused_sparse"):
+            nactive, tile_ids = build_active_tiles_device(
+                qmbrs, r_tile_mbrs, cover_mbrs)
+            out = rk.overlap_counts_sparse_fused(
+                q_coords, r_coords, cover_mbrs, nactive, tile_ids,
+                tq=tq, tr=tr, interpret=_INTERPRET,
+            )
     else:
-        out = rk.overlap_counts_tiled_fused(
-            q_coords, r_coords, qmbrs, r_tile_mbrs, cover_mbrs,
-            tq=tq, tr=tr, interpret=_INTERPRET,
-        )
+        with jax.named_scope("overlap_counts_fused_tiled"):
+            out = rk.overlap_counts_tiled_fused(
+                q_coords, r_coords, qmbrs, r_tile_mbrs, cover_mbrs,
+                tq=tq, tr=tr, interpret=_INTERPRET,
+            )
     return out[:q]
 
 

@@ -1,0 +1,31 @@
+"""repro.obs — unified tracing + metrics for the kernel-vs-communication story.
+
+The paper's entire argument decomposes execution into CPU build, CPU→DPU
+transfer, kernel, and retrieve phases (Fig 10); PrIM-style benchmarking shows
+PIM claims die without first-class phase instrumentation.  This package is
+that layer for the whole repro stack:
+
+* :mod:`repro.obs.trace`   — structured span tracer: nested spans with
+  monotonic timestamps, thread-safe, ~zero cost when disabled, JSON-lines
+  export, optional ``jax.profiler``/``named_scope`` annotation passthrough.
+* :mod:`repro.obs.metrics` — metrics registry: counters, gauges, histograms
+  with fixed bucket edges; Prometheus-text and JSON snapshot exporters.
+* :mod:`repro.obs.phases`  — the phase accounting model: every span is tagged
+  build / h2d / kernel / d2h / host, so any traced run can emit the paper's
+  Fig-10-style breakdown plus derived bytes-moved and ops/byte from layout
+  sizes.
+* :mod:`repro.obs.report`  — ``python -m repro.obs.report trace.jsonl``
+  renders the breakdown table; ``--selftest`` validates the accounting
+  end-to-end without jax; ``--demo`` traces a tiny real engine run.
+
+Instrumented producers: ``rtree.build_str_3level`` and
+``engine.shard_tree``/``subtree.build_layout`` (build), engine placement
+(h2d), ``engine.stream_batches`` (per-batch stage/dispatch/sync),
+``SpatialServer`` (queue wait, batch formation, fast-path stage/step/
+retrieve, degrade/recover transitions), and the pallint runtime guards
+(recompile / implicit-transfer counts become exported metrics).
+"""
+from repro.obs import metrics, phases, trace  # noqa: F401
+from repro.obs.metrics import Registry, get_registry  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    Tracer, disable, enable, event, get_tracer, span)

@@ -1,0 +1,316 @@
+"""Metrics registry: counters, gauges, histograms; Prometheus + JSON export.
+
+A deliberately small, dependency-free subset of the Prometheus client model:
+
+* :class:`Counter` — monotonically increasing, with optional labels (one
+  series per label combination).
+* :class:`Gauge`   — settable value, with optional labels.
+* :class:`Histogram` — **fixed bucket edges chosen at construction** (the
+  low-overhead design: one array increment per observation, no per-sample
+  storage).  Tracks count/sum/min/max plus per-bucket counts and supports
+  quantile *estimates* via linear interpolation inside the covering bucket
+  (:meth:`Histogram.percentile`).
+* :class:`Registry` — get-or-create factory for the above, thread-safe,
+  with two exporters: :meth:`Registry.prometheus_text` (Prometheus text
+  exposition format 0.0.4) and :meth:`Registry.snapshot` (plain JSON dict,
+  what the benchmarks persist next to their timing rows).
+
+``get_registry()`` returns the process-default registry (used by the pallint
+runtime guards); subsystems that want isolation (``SpatialServer``) create
+their own ``Registry`` and expose it.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+import threading
+from typing import Iterable, Mapping
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+
+# Default latency buckets (seconds): log-ish spacing from 100µs to 60s,
+# matching the serving layer's SLO range.  Sub-bucket percentile error is
+# bounded by the bucket width at the quantile's magnitude (~2.5x here).
+LATENCY_BUCKETS_S = (
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
+)
+
+
+def _label_key(labels: Mapping[str, str]) -> tuple[tuple[str, str], ...]:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _label_str(key: tuple[tuple[str, str], ...]) -> str:
+    if not key:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in key)
+    return "{" + inner + "}"
+
+
+class Counter:
+    """Monotonic counter family; one float series per label combination."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._lock = threading.Lock()
+        self._series: dict[tuple[tuple[str, str], ...], float] = {}
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name} cannot decrease")
+        key = _label_key(labels)
+        with self._lock:
+            self._series[key] = self._series.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        return self._series.get(_label_key(labels), 0.0)
+
+    def total(self) -> float:
+        with self._lock:
+            return sum(self._series.values())
+
+    def as_dict(self, label: str) -> dict[str, float]:
+        """``{label_value: count}`` for a single-label family (e.g. the
+        serving loop's event counters keyed by ``kind``)."""
+        out: dict[str, float] = {}
+        with self._lock:
+            for key, v in self._series.items():
+                d = dict(key)
+                if label in d:
+                    out[d[label]] = out.get(d[label], 0.0) + v
+        return out
+
+    def series(self) -> dict[tuple[tuple[str, str], ...], float]:
+        with self._lock:
+            return dict(self._series)
+
+
+class Gauge:
+    """Settable value family."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._lock = threading.Lock()
+        self._series: dict[tuple[tuple[str, str], ...], float] = {}
+
+    def set(self, value: float, **labels) -> None:
+        with self._lock:
+            self._series[_label_key(labels)] = float(value)
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        key = _label_key(labels)
+        with self._lock:
+            self._series[key] = self._series.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        return self._series.get(_label_key(labels), 0.0)
+
+    def series(self) -> dict[tuple[tuple[str, str], ...], float]:
+        with self._lock:
+            return dict(self._series)
+
+
+class Histogram:
+    """Fixed-bucket histogram (no labels; one instrument per series).
+
+    ``buckets`` are the **upper** edges of the first ``len(buckets)``
+    buckets; an implicit overflow bucket (``+Inf``) catches the rest.  An
+    observation lands in the first bucket whose edge is ``>= x``.
+
+    :meth:`percentile` returns an interpolated estimate: the covering bucket
+    is located from cumulative counts and the quantile is placed linearly
+    within it, with the first bucket floored at the observed minimum and the
+    overflow bucket capped at the observed maximum.  The estimate is exact
+    at bucket edges and off by at most one bucket width elsewhere — the
+    window is *all observations since construction* (cumulative, Prometheus
+    semantics), not a sliding window.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: Iterable[float] = LATENCY_BUCKETS_S):
+        self.name = name
+        self.help = help
+        edges = tuple(float(b) for b in buckets)
+        if not edges or any(nxt <= prev for nxt, prev in zip(edges[1:], edges)):
+            raise ValueError(f"histogram {name}: bucket edges must be "
+                             "non-empty and strictly increasing")
+        self.edges = edges
+        self._lock = threading.Lock()
+        self._counts = [0] * (len(edges) + 1)    # +1 = overflow (+Inf)
+        self._sum = 0.0
+        self._count = 0
+        self._min = math.inf
+        self._max = -math.inf
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        i = 0
+        for i, edge in enumerate(self.edges):
+            if x <= edge:
+                break
+        else:
+            i = len(self.edges)
+        with self._lock:
+            self._counts[i] += 1
+            self._sum += x
+            self._count += 1
+            self._min = min(self._min, x)
+            self._max = max(self._max, x)
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def mean(self) -> float | None:
+        return self._sum / self._count if self._count else None
+
+    def percentile(self, q: float) -> float | None:
+        """Interpolated quantile estimate in ``[0, 100]``; None when empty."""
+        if not 0 <= q <= 100:
+            raise ValueError(f"percentile {q} outside [0, 100]")
+        with self._lock:
+            total = self._count
+            if total == 0:
+                return None
+            counts = list(self._counts)
+            lo_obs, hi_obs = self._min, self._max
+        target = q / 100.0 * total
+        cum = 0
+        for i, c in enumerate(counts):
+            if cum + c >= target and c > 0:
+                lo = lo_obs if i == 0 else self.edges[i - 1]
+                hi = hi_obs if i == len(self.edges) else self.edges[i]
+                lo = max(lo, lo_obs) if i == 0 else lo
+                hi = min(hi, hi_obs)
+                if hi < lo:
+                    hi = lo
+                frac = (target - cum) / c
+                return lo + (hi - lo) * min(max(frac, 0.0), 1.0)
+            cum += c
+        return hi_obs
+
+    def bucket_counts(self) -> list[tuple[float, int]]:
+        """Cumulative ``(upper_edge, count)`` pairs, Prometheus-style."""
+        with self._lock:
+            counts = list(self._counts)
+        out, cum = [], 0
+        for edge, c in zip(self.edges, counts):
+            cum += c
+            out.append((edge, cum))
+        out.append((math.inf, cum + counts[-1]))
+        return out
+
+
+class Registry:
+    """Get-or-create instrument factory with JSON + Prometheus exporters."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: dict[str, object] = {}
+
+    def _get_or_create(self, cls, name: str, help: str, **kw):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"invalid metric name {name!r}")
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = cls(name, help, **kw)
+                self._instruments[name] = inst
+            elif not isinstance(inst, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(inst).__name__}, requested {cls.__name__}")
+            return inst
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get_or_create(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get_or_create(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Iterable[float] = LATENCY_BUCKETS_S) -> Histogram:
+        return self._get_or_create(Histogram, name, help, buckets=buckets)
+
+    def instruments(self) -> dict[str, object]:
+        with self._lock:
+            return dict(self._instruments)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._instruments.clear()
+
+    # -- exporters ---------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Plain-JSON snapshot of every instrument (what benchmarks persist)."""
+        out: dict[str, dict] = {}
+        for name, inst in sorted(self.instruments().items()):
+            if isinstance(inst, (Counter, Gauge)):
+                series = {(_label_str(k) or "__total__"): v
+                          for k, v in inst.series().items()}
+                out[name] = {"kind": inst.kind, "series": series}
+            else:
+                assert isinstance(inst, Histogram)
+                out[name] = {
+                    "kind": inst.kind,
+                    "count": inst.count, "sum": inst.sum,
+                    "buckets": [[e if math.isfinite(e) else "+Inf", c]
+                                for e, c in inst.bucket_counts()],
+                    "p50": inst.percentile(50),
+                    "p90": inst.percentile(90),
+                    "p99": inst.percentile(99),
+                }
+        return out
+
+    def snapshot_json(self) -> str:
+        return json.dumps(self.snapshot(), indent=2, sort_keys=True)
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition format 0.0.4."""
+        lines: list[str] = []
+        for name, inst in sorted(self.instruments().items()):
+            if inst.help:
+                lines.append(f"# HELP {name} {inst.help}")
+            lines.append(f"# TYPE {name} {inst.kind}")
+            if isinstance(inst, (Counter, Gauge)):
+                series = inst.series() or {(): 0.0}
+                for key in sorted(series):
+                    lines.append(f"{name}{_label_str(key)} "
+                                 f"{_format(series[key])}")
+            else:
+                assert isinstance(inst, Histogram)
+                for edge, cum in inst.bucket_counts():
+                    le = "+Inf" if math.isinf(edge) else _format(edge)
+                    lines.append(f'{name}_bucket{{le="{le}"}} {cum}')
+                lines.append(f"{name}_sum {_format(inst.sum)}")
+                lines.append(f"{name}_count {inst.count}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+def _format(v: float) -> str:
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+_DEFAULT = Registry()
+
+
+def get_registry() -> Registry:
+    """The process-default registry (pallint guards export into this one)."""
+    return _DEFAULT

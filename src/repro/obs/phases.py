@@ -1,0 +1,237 @@
+"""Phase accounting: the paper's Fig-10 decomposition as a first-class model.
+
+Every span in a trace carries one of five phase tags:
+
+=========  =================================================================
+``build``  host-side index construction (STR pack, shard_tree, build_layout)
+``h2d``    host→device movement (placement scatter/broadcast, batch staging)
+``kernel`` device compute (the fused two-phase query kernel)
+``d2h``    device→host movement (count retrieval, the end-of-set sync)
+``host``   everything else on the host (padding, batch formation, queueing)
+=========  =================================================================
+
+:func:`breakdown` folds a trace into per-phase **self-time** — each span is
+charged its duration minus its children's, so nested spans partition instead
+of double-counting and the per-phase seconds sum exactly to the root spans'
+wall time.  That identity is the subsystem's core invariant (tested in
+``tests/test_obs.py``) and is what makes "communication must not dominate"
+a checkable number instead of a paper claim.
+
+:func:`measure` / :func:`measure_query_phases` are the *blocking* measurement
+harnesses the benchmarks share: the pipelined hot path hides kernel latency
+behind the end-of-set sync (by design — its dispatch spans measure host cost
+only), so Fig-10-style kernel/transfer slices are taken by staging one batch
+and synchronizing each slice explicitly, medians over repeats, recorded into
+the trace as single synthesized spans.
+
+:func:`derived_stats` turns a ``ShardedLayout``/``SubtreeLayout`` into the
+bytes-moved and ops/byte numbers of the paper's Table IV accounting.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.obs import trace
+
+BUILD = "build"
+H2D = "h2d"
+KERNEL = "kernel"
+D2H = "d2h"
+HOST = "host"
+
+PHASES = (BUILD, H2D, KERNEL, D2H, HOST)
+
+# 8 integer ops per (query, rect) overlap test: 4 compares + 3 ands + 1 add.
+OPS_PER_RECT_TEST = 8
+
+
+def breakdown(events: Sequence[Mapping[str, Any]]) -> dict:
+    """Fold trace events into per-phase self-time seconds and fractions.
+
+    Returns ``{"seconds": {phase: s}, "fractions": {phase: f},
+    "wall_s": float, "spans": int}`` where ``wall_s`` is the summed duration
+    of root spans (spans with no parent) and ``sum(seconds.values()) ==
+    wall_s`` up to float rounding — self-times partition the roots exactly.
+    Unknown phase tags are folded into ``host``.
+    """
+    dur_ns: dict[int, int] = {}
+    phase: dict[int, str] = {}
+    child_ns: dict[int, int] = {}
+    wall_ns = 0
+    for e in events:
+        d = max(0, int(e["t1_ns"]) - int(e["t0_ns"]))
+        dur_ns[e["id"]] = d
+        phase[e["id"]] = e.get("phase") or HOST
+        parent = e.get("parent")
+        if parent is None:
+            wall_ns += d
+        else:
+            child_ns[parent] = child_ns.get(parent, 0) + d
+    seconds = {p: 0.0 for p in PHASES}
+    for eid, d in dur_ns.items():
+        self_ns = d - child_ns.get(eid, 0)
+        # a parent whose children overlap it awkwardly (cross-thread) never
+        # goes negative; clamp so the partition stays a partition
+        p = phase[eid]
+        if p not in seconds:
+            p = HOST
+        seconds[p] += max(0, self_ns) / 1e9
+    total = sum(seconds.values())
+    fractions = {p: (s / total if total > 0 else 0.0)
+                 for p, s in seconds.items()}
+    return {"seconds": seconds, "fractions": fractions,
+            "wall_s": wall_ns / 1e9, "spans": len(dur_ns)}
+
+
+def span_seconds(events: Sequence[Mapping[str, Any]], name: str) -> float:
+    """Summed duration of every span named ``name`` (0.0 when absent)."""
+    total = 0
+    for e in events:
+        if e.get("name") == name:
+            total += max(0, int(e["t1_ns"]) - int(e["t0_ns"]))
+    return total / 1e9
+
+
+def compose_pipeline(*, build_s: float, place_s: float,
+                     per_batch: Mapping[str, float], num_batches: int,
+                     stream_wall_s: float) -> dict:
+    """Fold one-time and per-batch phase slices into end-to-end fractions.
+
+    ``per_batch`` carries the blocking Fig-10 slices (``h2d_s``,
+    ``kernel_s``, ``d2h_s`` from :func:`measure_query_phases`);
+    ``stream_wall_s`` is the measured wall time of the real pipelined run
+    over ``num_batches`` batches.  Whatever the pipelined run spent beyond
+    the per-batch device slices is charged to ``host`` (batch formation,
+    padding, dispatch overhead) — it can reach zero when pipelining
+    perfectly overlaps staging with compute.
+    """
+    nb = int(num_batches)
+    h2d = place_s + nb * per_batch["h2d_s"]
+    kernel = nb * per_batch["kernel_s"]
+    d2h = nb * per_batch["d2h_s"]
+    host = max(0.0, stream_wall_s - nb * (per_batch["h2d_s"]
+                                          + per_batch["kernel_s"]
+                                          + per_batch["d2h_s"]))
+    seconds = {BUILD: build_s, H2D: h2d, KERNEL: kernel, D2H: d2h,
+               HOST: host}
+    total = sum(seconds.values())
+    return {
+        "seconds": seconds,
+        "fractions": {p: (s / total if total > 0 else 0.0)
+                      for p, s in seconds.items()},
+        "num_batches": nb,
+        "stream_wall_s": stream_wall_s,
+    }
+
+
+def derived_stats(layout, num_queries: int, batch_size: int) -> dict:
+    """Bytes-moved and arithmetic-intensity accounting from a layout.
+
+    Works for both ``ShardedLayout`` (broadcast) and ``SubtreeLayout``
+    via duck typing.  The kernel streams every device's local rect slice
+    once per query batch (DESIGN.md Sec 6), so bytes-read and rect-test
+    counts are closed-form in the layout — the same accounting the paper
+    extracts from DPU counters for Table IV.
+    """
+    nq = int(num_queries)
+    bs = int(batch_size)
+    nb = -(-nq // bs) if bs else 0
+    if hasattr(layout, "leaf_rects_flat"):          # ShardedLayout
+        scatter = int(layout.leaf_bytes) + int(layout.metadata_bytes)
+        broadcast = int(layout.cover_mbrs.nbytes)
+        rects_per_device = int(layout.rects_per_device)
+        num_devices = int(layout.num_devices)
+    else:                                           # SubtreeLayout
+        scatter = int(layout.scatter_bytes)
+        broadcast = int(layout.root_mbrs.nbytes)
+        rects_per_device = int(layout.rects.shape[1])
+        num_devices = int(layout.num_devices)
+    query_bytes = nb * bs * 16
+    result_bytes = nq * 4
+    h2d_bytes = scatter + broadcast + query_bytes
+    kernel_bytes_read = nb * num_devices * rects_per_device * 16
+    rect_tests = nq * rects_per_device * num_devices
+    ops = rect_tests * OPS_PER_RECT_TEST
+    streamed = kernel_bytes_read + h2d_bytes + result_bytes
+    return {
+        "h2d_bytes": h2d_bytes,
+        "d2h_bytes": result_bytes,
+        "placement_bytes": scatter + broadcast,
+        "query_bytes": query_bytes,
+        "kernel_bytes_read": kernel_bytes_read,
+        "rect_tests": rect_tests,
+        "ops": ops,
+        "ops_per_transferred_byte": (
+            ops / (h2d_bytes + result_bytes) if nq else 0.0),
+        "ops_per_streamed_byte": ops / streamed if nq else 0.0,
+    }
+
+
+def measure(fn: Callable[[], Any], *, name: str, phase: str = KERNEL,
+            repeats: int = 3, warmup: int = 1, **attrs) -> float:
+    """Median blocking wall time of ``fn()`` in seconds, recorded as one
+    synthesized span — the shared timing primitive of every benchmark.
+
+    Blocks on jax outputs so device work is inside the measurement (this is
+    a measurement harness, not the hot path — the sync is the point).
+    """
+    import jax
+
+    for _ in range(warmup):
+        out = fn()
+        jax.block_until_ready(out)    # pallint: disable=PL102
+    times = []
+    for _ in range(int(repeats)):
+        t0 = time.monotonic_ns()
+        out = fn()
+        jax.block_until_ready(out)    # pallint: disable=PL102
+        times.append(time.monotonic_ns() - t0)
+    med = sorted(times)[len(times) // 2] / 1e9
+    trace.record(name, phase=phase, seconds=med, repeats=repeats, **attrs)
+    return med
+
+
+def measure_query_phases(step, operands, batch, rep_sharding, *,
+                         repeats: int = 3, warmup: int = 1) -> dict:
+    """Blocking per-batch Fig-10 slices for one engine step.
+
+    Stages ``batch`` (H2D, synced), runs ``step`` (kernel, synced), and
+    retrieves the counts (D2H) — each slice timed separately, medians over
+    ``repeats``, recorded as three synthesized spans.  ``step`` must be a
+    *non-donating* step (the staged buffer is reused across repeats); see
+    ``benchmarks/common.bench_step``.
+    """
+    import jax
+
+    h2d, kern, d2h = [], [], []
+    for _ in range(warmup):
+        staged = jax.device_put(batch, rep_sharding)
+        jax.block_until_ready(step(*operands, staged))  # pallint: disable=PL102
+    for _ in range(int(repeats)):
+        t0 = time.monotonic_ns()
+        staged = jax.device_put(batch, rep_sharding)
+        jax.block_until_ready(staged)                   # pallint: disable=PL102
+        t1 = time.monotonic_ns()
+        out = step(*operands, staged)
+        jax.block_until_ready(out)                      # pallint: disable=PL102
+        t2 = time.monotonic_ns()
+        jax.device_get(out)
+        t3 = time.monotonic_ns()
+        h2d.append(t1 - t0)
+        kern.append(t2 - t1)
+        d2h.append(t3 - t2)
+
+    def _med(xs):
+        return sorted(xs)[len(xs) // 2] / 1e9
+
+    slices = {"h2d_s": _med(h2d), "kernel_s": _med(kern),
+              "d2h_s": _med(d2h)}
+    nbytes = int(getattr(batch, "nbytes", 0))
+    trace.record("batch_stage", phase=H2D, seconds=slices["h2d_s"],
+                 bytes=nbytes)
+    trace.record("batch_kernel", phase=KERNEL, seconds=slices["kernel_s"],
+                 batch=int(batch.shape[0]))
+    trace.record("batch_retrieve", phase=D2H, seconds=slices["d2h_s"],
+                 bytes=int(batch.shape[0]) * 4)
+    return slices

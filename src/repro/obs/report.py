@@ -1,0 +1,235 @@
+"""Render a Fig-10-style phase breakdown from a trace file.
+
+Usage::
+
+    python -m repro.obs.report TRACE.jsonl [--json] [--top N]
+    python -m repro.obs.report --selftest [--out DIR]
+    python -m repro.obs.report --demo [--out DIR]
+
+* With a trace file: prints the per-phase self-time table (seconds,
+  fraction, bar) plus the top spans by self-time.
+* ``--selftest``: builds a synthetic nested trace with known durations
+  (stdlib only — no jax), checks the accounting invariants (phase seconds
+  partition the wall time, fractions sum to 1, JSONL round-trips, the
+  Prometheus exporter emits well-formed text), renders the table, and exits
+  0/1.  CI runs this in the pallint job.
+* ``--demo``: traces a tiny real engine run (build → placement → streamed
+  queries → blocking Fig-10 slices) and renders its breakdown; with
+  ``--out`` the trace JSONL and a metrics snapshot are written there (CI
+  uploads these as tier-1 artifacts).
+
+Exit status: 0 on success, 1 on a failed selftest or unreadable trace.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.obs import metrics, phases, trace
+
+_BAR_WIDTH = 30
+
+
+def render_table(events, top: int = 5) -> str:
+    """The human-readable breakdown: phase table + top self-time spans."""
+    bd = phases.breakdown(events)
+    lines = ["phase     seconds      fraction",
+             "-----     -------      --------"]
+    for p in phases.PHASES:
+        s = bd["seconds"][p]
+        f = bd["fractions"][p]
+        bar = "#" * int(round(f * _BAR_WIDTH))
+        lines.append(f"{p:<9} {s:>10.6f}   {f:>7.1%}  {bar}")
+    lines.append(f"total     {sum(bd['seconds'].values()):>10.6f}   "
+                 f"(wall {bd['wall_s']:.6f}s over {bd['spans']} spans)")
+    if top > 0:
+        self_s = _self_times(events)
+        ranked = sorted(self_s.items(), key=lambda kv: -kv[1])[:top]
+        if ranked:
+            lines.append("")
+            lines.append(f"top spans by self-time:")
+            for (name, phase_tag), s in ranked:
+                lines.append(f"  {s:>10.6f}s  [{phase_tag}] {name}")
+    return "\n".join(lines)
+
+
+def _self_times(events) -> dict[tuple[str, str], float]:
+    child_ns: dict[int, int] = {}
+    for e in events:
+        p = e.get("parent")
+        if p is not None:
+            child_ns[p] = child_ns.get(p, 0) + (e["t1_ns"] - e["t0_ns"])
+    out: dict[tuple[str, str], float] = {}
+    for e in events:
+        self_ns = max(0, (e["t1_ns"] - e["t0_ns"]) - child_ns.get(e["id"], 0))
+        key = (e["name"], e.get("phase") or phases.HOST)
+        out[key] = out.get(key, 0.0) + self_ns / 1e9
+    return out
+
+
+def _write_artifacts(out_dir: str, tracer: trace.Tracer,
+                     registry: metrics.Registry) -> tuple[str, str]:
+    os.makedirs(out_dir, exist_ok=True)
+    trace_path = os.path.join(out_dir, "trace.jsonl")
+    metrics_path = os.path.join(out_dir, "metrics.json")
+    tracer.export_jsonl(trace_path)
+    with open(metrics_path, "w", encoding="utf-8") as fh:
+        fh.write(registry.snapshot_json() + "\n")
+    return trace_path, metrics_path
+
+
+# ---------------------------------------------------------------------------
+# --selftest: synthetic trace, no jax
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_trace(tracer: trace.Tracer) -> None:
+    """A nested pipeline-shaped trace with real (tiny) monotonic durations."""
+    with tracer.span("pipeline", phase=phases.HOST):
+        with tracer.span("build_str_3level", phase=phases.BUILD):
+            time.sleep(0.002)
+        with tracer.span("place", phase=phases.H2D):
+            time.sleep(0.001)
+        for i in range(3):
+            with tracer.span("stage", phase=phases.H2D, batch=i):
+                time.sleep(0.0005)
+            with tracer.span("dispatch", phase=phases.KERNEL, batch=i):
+                time.sleep(0.002)
+        with tracer.span("sync_retrieve", phase=phases.D2H):
+            time.sleep(0.001)
+        tracer.event("degrade", phase=phases.HOST, reason="selftest")
+
+
+def _selftest(out_dir: str | None) -> int:
+    tracer = trace.Tracer()
+    tracer.enable()
+    _synthetic_trace(tracer)
+    tracer.disable()
+    events = tracer.events()
+    bd = phases.breakdown(events)
+    failures = []
+    # invariant 1: self-times partition the root wall time
+    if abs(sum(bd["seconds"].values()) - bd["wall_s"]) > 1e-9 + 1e-6 * bd["wall_s"]:
+        failures.append(
+            f"phase seconds {sum(bd['seconds'].values()):.9f} != "
+            f"wall {bd['wall_s']:.9f}")
+    # invariant 2: fractions sum to 1 for a non-empty trace
+    if abs(sum(bd["fractions"].values()) - 1.0) > 1e-9:
+        failures.append("fractions do not sum to 1")
+    # invariant 3: every slept phase is represented
+    for p in (phases.BUILD, phases.H2D, phases.KERNEL, phases.D2H):
+        if bd["seconds"][p] <= 0:
+            failures.append(f"phase {p!r} recorded no time")
+    # invariant 4: the kernel sleeps dominate this synthetic pipeline
+    if bd["seconds"][phases.KERNEL] < bd["seconds"][phases.D2H]:
+        failures.append("kernel phase did not dominate the synthetic trace")
+    # invariant 5: JSONL round-trip is lossless
+    reloaded = [json.loads(line) for line in tracer.to_jsonl().splitlines()]
+    if reloaded != events:
+        failures.append("JSONL round-trip mismatch")
+    # invariant 6: the metrics exporters are well-formed
+    reg = metrics.Registry()
+    reg.counter("selftest_events_total", "selftest").inc(3, kind="dispatch")
+    hist = reg.histogram("selftest_latency_seconds", "selftest")
+    for v in (0.001, 0.002, 0.004, 0.2):
+        hist.observe(v)
+    text = reg.prometheus_text()
+    if ('selftest_events_total{kind="dispatch"} 3' not in text
+            or 'selftest_latency_seconds_bucket{le="+Inf"} 4' not in text):
+        failures.append("prometheus exposition malformed:\n" + text)
+    p50 = hist.percentile(50)
+    if p50 is None or not (0.001 <= p50 <= 0.004):
+        failures.append(f"histogram p50 estimate {p50} outside sample range")
+
+    print(render_table(events))
+    if out_dir:
+        paths = _write_artifacts(out_dir, tracer, reg)
+        print(f"wrote {paths[0]} and {paths[1]}")
+    if failures:
+        for f in failures:
+            print(f"SELFTEST FAIL: {f}", file=sys.stderr)
+        return 1
+    print("selftest OK")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# --demo: trace a tiny real engine run (needs jax)
+# ---------------------------------------------------------------------------
+
+
+def _demo(out_dir: str | None) -> int:
+    import numpy as np
+
+    from repro import compat
+    from repro.core import engine as beng
+    from repro.core import rtree
+    from repro.data import datasets, spider
+
+    tracer = trace.get_tracer()
+    tracer.reset()
+    tracer.enable()
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    rects = spider.uniform(4000, seed=11, max_size=0.02)
+    queries = datasets.make_queries(rects, 0.5, seed=12)
+    with tracer.span("demo", phase=phases.HOST):
+        tree = rtree.build_str_3level(
+            rects, *rtree.choose_parameters(len(rects), 1))
+        eng = beng.BroadcastEngine(tree, mesh, batch_size=256)
+        eng.query(queries)
+        step = beng.make_query_step(mesh, donate_queries=False)
+        batch = np.asarray(queries[:256], np.int32)
+        phases.measure_query_phases(
+            step, (eng.leaf_coords, eng.rect_tile_mbrs, eng.cover_mbrs),
+            batch, eng._rep_sh, repeats=3)
+    tracer.disable()
+    events = tracer.events()
+    print(render_table(events))
+    if out_dir:
+        reg = metrics.get_registry()
+        paths = _write_artifacts(out_dir, tracer, reg)
+        print(f"wrote {paths[0]} and {paths[1]}")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro.obs.report",
+        description="render a Fig-10-style phase breakdown from a trace")
+    parser.add_argument("trace", nargs="?", help="trace JSONL file")
+    parser.add_argument("--json", action="store_true",
+                        help="emit the breakdown as JSON instead of a table")
+    parser.add_argument("--top", type=int, default=5,
+                        help="how many top spans to list (0 disables)")
+    parser.add_argument("--selftest", action="store_true",
+                        help="validate the accounting on a synthetic trace")
+    parser.add_argument("--demo", action="store_true",
+                        help="trace a tiny real engine run (needs jax)")
+    parser.add_argument("--out", metavar="DIR", default=None,
+                        help="write trace.jsonl + metrics.json artifacts")
+    args = parser.parse_args(argv)
+
+    if args.selftest:
+        return _selftest(args.out)
+    if args.demo:
+        return _demo(args.out)
+    if not args.trace:
+        parser.print_usage(sys.stderr)
+        return 2
+    try:
+        events = trace.load_jsonl(args.trace)
+    except (OSError, ValueError) as e:
+        print(f"cannot read trace {args.trace!r}: {e}", file=sys.stderr)
+        return 1
+    if args.json:
+        print(json.dumps(phases.breakdown(events), indent=2, sort_keys=True))
+    else:
+        print(render_table(events, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,275 @@
+"""Structured span tracer: nested spans, monotonic clocks, JSONL export.
+
+Design constraints (DESIGN.md Sec 12):
+
+* **~zero cost when disabled.**  ``span()`` on a disabled tracer returns one
+  shared no-op context manager — no allocation, no clock read, no lock.  The
+  hot path (``stream_batches``, the serving loop) calls ``span()``
+  unconditionally and pays only an attribute check per call.
+* **Monotonic timestamps.**  All times come from ``time.monotonic_ns`` —
+  never the wall clock (pallint PL111 enforces the same rule on the hot-path
+  modules this tracer instruments).
+* **Thread-safe, per-thread nesting.**  The active-span stack is
+  thread-local, so spans opened on the serving worker thread parent
+  correctly within that thread and never cross-parent onto another thread's
+  stack; the event buffer itself is shared under a lock.
+* **JSON-lines export.**  One event per line, each a flat dict —
+  ``{"id", "parent", "name", "phase", "t0_ns", "t1_ns", "thread", "attrs"}``
+  — consumed by :mod:`repro.obs.phases` and ``python -m repro.obs.report``.
+* **jax passthrough.**  With ``enable(annotate=True)`` every span also
+  enters ``jax.profiler.TraceAnnotation`` (falling back to
+  ``jax.named_scope``), so spans show up in a captured jax profile without a
+  second instrumentation layer.  jax is imported lazily and only then.
+
+Phases are plain strings (see :mod:`repro.obs.phases`); the tracer itself
+has no opinion about them beyond recording the tag.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Any, Callable, Iterator
+
+
+class _NullSpan:
+    """Shared no-op span handed out while the tracer is disabled."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **attrs) -> None:
+        """No-op attribute update (mirrors :meth:`Span.set`)."""
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def _jax_annotation(name: str):
+    """Best-available jax annotation context for ``name`` (lazy import)."""
+    try:
+        import jax
+    except Exception:           # jax genuinely unavailable: annotate is a no-op
+        return None
+    profiler = getattr(jax, "profiler", None)
+    ann = getattr(profiler, "TraceAnnotation", None) if profiler else None
+    if ann is None:
+        ann = getattr(jax, "named_scope", None)
+    return ann(name) if ann is not None else None
+
+
+class Span:
+    """One open span: records ``[t0, t1]`` and its parent on exit."""
+
+    __slots__ = ("_tracer", "name", "phase", "attrs", "id", "parent",
+                 "t0_ns", "_ann")
+
+    def __init__(self, tracer: "Tracer", name: str, phase: str,
+                 attrs: dict[str, Any]):
+        self._tracer = tracer
+        self.name = name
+        self.phase = phase
+        self.attrs = attrs
+        self.id = tracer._next_id()
+        self.parent: int | None = None
+        self.t0_ns = 0
+        self._ann = None
+
+    def set(self, **attrs) -> None:
+        """Attach/overwrite attributes while the span is open."""
+        self.attrs.update(attrs)
+
+    def __enter__(self) -> "Span":
+        stack = self._tracer._stack()
+        self.parent = stack[-1] if stack else None
+        stack.append(self.id)
+        if self._tracer._annotate:
+            self._ann = _jax_annotation(self.name)
+            if self._ann is not None:
+                self._ann.__enter__()
+        self.t0_ns = time.monotonic_ns()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        t1 = time.monotonic_ns()
+        if self._ann is not None:
+            self._ann.__exit__(*exc)
+            self._ann = None
+        stack = self._tracer._stack()
+        if stack and stack[-1] == self.id:
+            stack.pop()
+        self._tracer._record(self, t1)
+        return False
+
+
+class Tracer:
+    """Thread-safe span recorder.  Disabled (and empty) until :meth:`enable`."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._local = threading.local()
+        self._events: list[dict[str, Any]] = []
+        self._id = 0
+        self._enabled = False
+        self._annotate = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def enabled(self) -> bool:
+        return self._enabled
+
+    def enable(self, *, annotate: bool = False) -> None:
+        """Start recording; ``annotate=True`` mirrors spans into jax."""
+        self._annotate = bool(annotate)
+        self._enabled = True
+
+    def disable(self) -> None:
+        self._enabled = False
+
+    def reset(self) -> None:
+        """Drop all recorded events (ids restart; open spans are orphaned)."""
+        with self._lock:
+            self._events.clear()
+            self._id = 0
+
+    # -- recording ---------------------------------------------------------
+
+    def span(self, name: str, *, phase: str = "host", **attrs) -> Span | _NullSpan:
+        """Open a span; returns the shared no-op span when disabled."""
+        if not self._enabled:
+            return _NULL_SPAN
+        return Span(self, name, phase, attrs)
+
+    def event(self, name: str, *, phase: str = "host", **attrs) -> None:
+        """Record an instantaneous event (``t0 == t1``)."""
+        if not self._enabled:
+            return
+        now = time.monotonic_ns()
+        stack = self._stack()
+        with self._lock:
+            self._id += 1
+            self._events.append({
+                "id": self._id,
+                "parent": stack[-1] if stack else None,
+                "name": name, "phase": phase,
+                "t0_ns": now, "t1_ns": now,
+                "thread": threading.get_ident(),
+                "attrs": attrs,
+            })
+
+    def record(self, name: str, *, phase: str, seconds: float,
+               **attrs) -> None:
+        """Record a synthesized span of a known duration ending now.
+
+        For measurement harnesses (``phases.measure``) that time several
+        repeats and want exactly one representative span in the trace —
+        re-entering a live span per repeat would multiply the phase totals.
+        """
+        if not self._enabled:
+            return
+        t1 = time.monotonic_ns()
+        t0 = t1 - max(0, int(seconds * 1e9))
+        stack = self._stack()
+        with self._lock:
+            self._id += 1
+            self._events.append({
+                "id": self._id,
+                "parent": stack[-1] if stack else None,
+                "name": name, "phase": phase,
+                "t0_ns": t0, "t1_ns": t1,
+                "thread": threading.get_ident(),
+                "attrs": attrs,
+            })
+
+    def _next_id(self) -> int:
+        with self._lock:
+            self._id += 1
+            return self._id
+
+    def _stack(self) -> list[int]:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    def _record(self, span: Span, t1_ns: int) -> None:
+        with self._lock:
+            self._events.append({
+                "id": span.id, "parent": span.parent,
+                "name": span.name, "phase": span.phase,
+                "t0_ns": span.t0_ns, "t1_ns": t1_ns,
+                "thread": threading.get_ident(),
+                "attrs": span.attrs,
+            })
+
+    # -- export ------------------------------------------------------------
+
+    def events(self) -> list[dict[str, Any]]:
+        """Snapshot of recorded events (shallow copies, safe to mutate)."""
+        with self._lock:
+            return [dict(e) for e in self._events]
+
+    def to_jsonl(self) -> str:
+        return "\n".join(json.dumps(e, sort_keys=True) for e in self.events())
+
+    def export_jsonl(self, path: str) -> int:
+        """Write one JSON event per line; returns the event count."""
+        events = self.events()
+        with open(path, "w", encoding="utf-8") as fh:
+            for e in events:
+                fh.write(json.dumps(e, sort_keys=True) + "\n")
+        return len(events)
+
+
+def load_jsonl(path: str) -> list[dict[str, Any]]:
+    """Read events written by :meth:`Tracer.export_jsonl`."""
+    out = []
+    with open(path, "r", encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+# -- module-level default tracer (what the instrumented stack uses) ---------
+
+_GLOBAL = Tracer()
+
+
+def get_tracer() -> Tracer:
+    return _GLOBAL
+
+
+def enabled() -> bool:
+    return _GLOBAL.enabled
+
+
+def enable(*, annotate: bool = False) -> None:
+    _GLOBAL.enable(annotate=annotate)
+
+
+def disable() -> None:
+    _GLOBAL.disable()
+
+
+def reset() -> None:
+    _GLOBAL.reset()
+
+
+def span(name: str, *, phase: str = "host", **attrs) -> Span | _NullSpan:
+    return _GLOBAL.span(name, phase=phase, **attrs)
+
+
+def event(name: str, *, phase: str = "host", **attrs) -> None:
+    _GLOBAL.event(name, phase=phase, **attrs)
+
+
+def record(name: str, *, phase: str, seconds: float, **attrs) -> None:
+    _GLOBAL.record(name, phase=phase, seconds=seconds, **attrs)

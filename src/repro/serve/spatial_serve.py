@@ -27,8 +27,20 @@ headline:
   to recover.  In healthy steady state a sampled oracle cross-check guards
   against silent corruption; a failed cross-check is treated as a fault.
 * **Health/metrics surface** — queue depth, shed/expired counts, retries,
-  degradations/recoveries, per-fault counters, and p50/p99 batch and request
-  latency.
+  degradations/recoveries, per-fault counters, and p50/p90/p99 batch and
+  request latency.  All of it is backed by a per-server
+  :class:`repro.obs.metrics.Registry` (``server.registry``): events and
+  faults are labeled counter families (``serve_events_total{kind=...}``,
+  ``serve_faults_total{kind=...}``), latencies are fixed-bucket histograms
+  (``serve_batch_latency_seconds``, ``serve_request_latency_seconds``,
+  ``serve_queue_wait_seconds``) whose percentiles are interpolated estimates
+  over *all observations since server construction* (cumulative window,
+  Prometheus semantics — not a sliding ring).  :meth:`SpatialServer.metrics`
+  keeps its original dict shape on top of the registry, and
+  ``server.registry.prometheus_text()`` exports the same numbers for
+  scraping.  Batches and fault-handling transitions also emit spans/events
+  into the :mod:`repro.obs.trace` tracer when it is enabled (DESIGN.md
+  Sec 12).
 
 Fault injection for all of the above lives in :mod:`repro.testing.chaos`,
 which wraps the two seams this module exposes (``_step`` — the jitted query
@@ -54,6 +66,9 @@ import jax
 from repro.core.engine import (
     EMPTY_RECT, morton_order, validate_queries)
 from repro.kernels import ref
+from repro.obs import metrics as obs_metrics
+from repro.obs import phases as obs_phases
+from repro.obs import trace as obs_trace
 
 HEALTHY = "healthy"
 DEGRADED = "degraded"
@@ -155,6 +170,7 @@ class SpatialServer:
         clock: Callable[[], float] = time.monotonic,
         sleep: Callable[[float], None] = time.sleep,
         warmup: bool = True,
+        registry: obs_metrics.Registry | None = None,
     ):
         self.engine = engine
         self.config = config or ServeConfig()
@@ -178,11 +194,31 @@ class SpatialServer:
         self._served_batches = 0
         self._degraded_batches_since = 0
         self._batch_ewma_s: float | None = None
-        self._batch_lat = collections.deque(maxlen=512)
-        self._req_lat = collections.deque(maxlen=4096)
-        self._counters = collections.Counter()
-        self._faults = collections.Counter()
         self._last_fault: str | None = None
+
+        # registry-backed metrics surface (per-server by default, so two
+        # servers never share series; pass a registry to aggregate)
+        self.registry = registry if registry is not None else (
+            obs_metrics.Registry())
+        self._events = self.registry.counter(
+            "serve_events_total",
+            "serving-loop events by kind (submitted/served/shed_*/...)")
+        self._fault_counter = self.registry.counter(
+            "serve_faults_total", "fast-path faults by kind")
+        self._health_gauge = self.registry.gauge(
+            "serve_healthy", "1 while on the fast path, 0 while degraded")
+        self._health_gauge.set(1.0)
+        self._queue_gauge = self.registry.gauge(
+            "serve_queue_depth", "current admitted-but-unserved requests")
+        self._batch_hist = self.registry.histogram(
+            "serve_batch_latency_seconds",
+            "wall time of one served micro-batch (execute only)")
+        self._req_hist = self.registry.histogram(
+            "serve_request_latency_seconds",
+            "submit-to-completion latency of served requests")
+        self._wait_hist = self.registry.histogram(
+            "serve_queue_wait_seconds",
+            "submit-to-batch-formation wait of served requests")
 
         bs = self.config.batch_size
         self._pad_rect = np.asarray(EMPTY_RECT, dtype=np.int32).reshape(1, 4)
@@ -203,8 +239,8 @@ class SpatialServer:
         if deadline_s is None:
             deadline_s = self.config.default_deadline_s
         ticket = SpatialTicket(validated, now, now + deadline_s)
+        self._events.inc(kind="submitted")
         with self._lock:
-            self._counters["submitted"] += 1
             if not self._accepting:
                 return self._shed(ticket, "stopped", now)
             if len(self._queue) >= self.config.max_queue:
@@ -215,12 +251,14 @@ class SpatialServer:
                 if now + batches_ahead * ewma > ticket.deadline:
                     return self._shed(ticket, "deadline", now)
             self._queue.append(ticket)
+            self._queue_gauge.set(len(self._queue))
             self._not_empty.notify()
         return ticket
 
     def _shed(self, ticket: SpatialTicket, reason: str, now: float
               ) -> SpatialTicket:
-        self._counters[f"shed_{reason}"] += 1
+        self._events.inc(kind=f"shed_{reason}")
+        obs_trace.event("serve.shed", reason=reason)
         ticket.status = STATUS_SHED
         ticket.reason = reason
         ticket.latency_s = now - ticket.submit_t
@@ -238,34 +276,38 @@ class SpatialServer:
                 self._not_empty.wait(timeout)
             while self._queue and len(taken) < cfg.batch_size:
                 taken.append(self._queue.popleft())
+            self._queue_gauge.set(len(self._queue))
         if not taken:
             return 0
 
-        now = self._clock()
-        live: list[SpatialTicket] = []
-        for t in taken:
-            if t.deadline < now:
-                with self._lock:
-                    self._counters["expired"] += 1
-                t.status = STATUS_EXPIRED
-                t.latency_s = now - t.submit_t
-                t._event.set()
-            else:
-                live.append(t)
-        if not live:
-            return len(taken)
+        with obs_trace.span("serve.form_batch", phase=obs_phases.HOST,
+                            taken=len(taken)):
+            now = self._clock()
+            live: list[SpatialTicket] = []
+            for t in taken:
+                if t.deadline < now:
+                    self._events.inc(kind="expired")
+                    t.status = STATUS_EXPIRED
+                    t.latency_s = now - t.submit_t
+                    t._event.set()
+                else:
+                    live.append(t)
+            if not live:
+                return len(taken)
 
-        k = len(live)
-        batch = np.stack([t.rect for t in live]).astype(np.int32)
-        inv = None
-        if cfg.sort_batches and k > 1:
-            order = morton_order(batch)
-            inv = np.argsort(order, kind="stable")
-            batch = batch[order]
-        pad = cfg.batch_size - k
-        if pad:
-            batch = np.concatenate(
-                [batch, np.tile(self._pad_rect, (pad, 1))])
+            for t in live:
+                self._wait_hist.observe(now - t.submit_t)
+            k = len(live)
+            batch = np.stack([t.rect for t in live]).astype(np.int32)
+            inv = None
+            if cfg.sort_batches and k > 1:
+                order = morton_order(batch)
+                inv = np.argsort(order, kind="stable")
+                batch = batch[order]
+            pad = cfg.batch_size - k
+            if pad:
+                batch = np.concatenate(
+                    [batch, np.tile(self._pad_rect, (pad, 1))])
 
         t0 = self._clock()
         counts, path = self._execute(batch, k)
@@ -274,18 +316,18 @@ class SpatialServer:
             counts = counts[inv]
 
         done_t = self._clock()
+        self._batch_hist.observe(dt)
+        self._events.inc(k, kind="served")
         with self._lock:
-            self._batch_lat.append(dt)
             self._batch_ewma_s = (dt if self._batch_ewma_s is None
                                   else 0.8 * self._batch_ewma_s + 0.2 * dt)
-            self._counters["served"] += k
             self._served_batches += 1
         for t, c in zip(live, counts):
             t.status = STATUS_OK
             t.count = int(c)
             t.path = path
             t.latency_s = done_t - t.submit_t
-            self._req_lat.append(t.latency_s)
+            self._req_hist.observe(t.latency_s)
             t._event.set()
         return len(taken)
 
@@ -311,8 +353,7 @@ class SpatialServer:
                 counts = self._probe(padded, k)
                 if counts is not None:
                     return counts[:k], PATH_FAST
-            with self._lock:
-                self._counters["degraded_batches"] += 1
+            self._events.inc(kind="degraded_batches")
             return self._ref_counts(padded[:k]), PATH_REF
 
         last: Exception | None = None
@@ -328,22 +369,37 @@ class SpatialServer:
                     self._sleep(min(cfg.backoff_base_s * (2 ** attempt),
                                     cfg.backoff_cap_s))
         self._degrade(last)
-        with self._lock:
-            self._counters["degraded_batches"] += 1
+        self._events.inc(kind="degraded_batches")
         return self._ref_counts(padded[:k]), PATH_REF
 
     def _fast_batch(self, padded: np.ndarray) -> np.ndarray:
-        """One watchdog-guarded fast-path attempt: stage → step → retrieve."""
+        """One watchdog-guarded fast-path attempt: stage → step → retrieve.
+
+        The stage/step/retrieve spans open on the *pool* thread, so their
+        self-times parent under that thread's ``serve.batch`` span; the pump
+        thread deliberately does not wrap its wait on the future — that would
+        double-count the same wall time from a second thread."""
 
         def call():
-            staged = self._place(padded, self._rep_sh)
-            with warnings.catch_warnings():
-                # Same expected advisory as stream_batches: the donated
-                # (bs, 4) query buffer can never alias the (bs,) counts.
-                warnings.filterwarnings(
-                    "ignore", message="Some donated buffers were not usable")
-                out = self._step(*self._operands, staged)
-            return np.asarray(jax.device_get(out))
+            with obs_trace.span("serve.batch", phase=obs_phases.HOST,
+                                batch_size=int(padded.shape[0])):
+                with obs_trace.span("serve.stage", phase=obs_phases.H2D):
+                    staged = self._place(padded, self._rep_sh)
+                with warnings.catch_warnings():
+                    # Same expected advisory as stream_batches: the donated
+                    # (bs, 4) query buffer can never alias the (bs,) counts.
+                    warnings.filterwarnings(
+                        "ignore",
+                        message="Some donated buffers were not usable")
+                    with obs_trace.span("serve.step",
+                                        phase=obs_phases.KERNEL):
+                        out = self._step(*self._operands, staged)
+                        if obs_trace.enabled():
+                            # only when tracing: charge device time to the
+                            # kernel span instead of the retrieve below
+                            jax.block_until_ready(out)  # pallint: disable=PL102
+                with obs_trace.span("serve.retrieve", phase=obs_phases.D2H):
+                    return np.asarray(jax.device_get(out))
 
         fut = self._pool.submit(call)
         try:
@@ -353,6 +409,8 @@ class SpatialServer:
             # give the next attempt a fresh one — never wait on a straggler.
             self._pool.shutdown(wait=False)
             self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+            obs_trace.event("serve.watchdog_timeout",
+                            budget_s=self.config.watchdog_s)
             raise WatchdogTimeout(
                 f"batch exceeded watchdog {self.config.watchdog_s}s") from None
         self._sanity_check(counts, padded.shape[0])
@@ -383,8 +441,7 @@ class SpatialServer:
         m = min(k, cfg.crosscheck_samples)
         if m == 0:
             return
-        with self._lock:
-            self._counters["crosschecks"] += 1
+        self._events.inc(kind="crosschecks")
         want = ref.overlap_counts_np_chunked(padded[:m], self._host_rects)
         if not np.array_equal(counts[:m].astype(np.int32), want):
             raise CorruptOutputError(
@@ -393,8 +450,7 @@ class SpatialServer:
     def _probe(self, padded: np.ndarray, k: int) -> np.ndarray | None:
         """Degraded-state recovery probe: one guarded fast-path attempt,
         validated against the reference on a sample before trusting it."""
-        with self._lock:
-            self._counters["probes"] += 1
+        self._events.inc(kind="probes")
         try:
             counts = self._fast_batch(padded)
             m = min(k, max(self.config.crosscheck_samples, 1))
@@ -407,8 +463,10 @@ class SpatialServer:
             return None
         with self._lock:
             self.health = HEALTHY
-            self._counters["recoveries"] += 1
             self._degraded_batches_since = 0
+        self._events.inc(kind="recoveries")
+        self._health_gauge.set(1.0)
+        obs_trace.event("serve.recover")
         return counts
 
     def _ref_counts(self, queries: np.ndarray) -> np.ndarray:
@@ -419,17 +477,23 @@ class SpatialServer:
         kind = ("watchdog" if isinstance(e, WatchdogTimeout)
                 else "corrupt" if isinstance(e, CorruptOutputError)
                 else type(e).__name__)
+        self._events.inc(kind="retries")
+        self._fault_counter.inc(kind=kind)
+        obs_trace.event("serve.retry", kind=kind)
         with self._lock:
-            self._counters["retries"] += 1
-            self._faults[kind] += 1
             self._last_fault = f"{kind}: {e}"
 
     def _degrade(self, e: Exception | None) -> None:
         with self._lock:
-            if self.health != DEGRADED:
+            degraded_now = self.health != DEGRADED
+            if degraded_now:
                 self.health = DEGRADED
-                self._counters["degradations"] += 1
                 self._degraded_batches_since = 0
+        if degraded_now:
+            self._events.inc(kind="degradations")
+            self._health_gauge.set(0.0)
+            obs_trace.event("serve.degrade",
+                            reason=type(e).__name__ if e else "unknown")
 
     def _warmup(self, bs: int) -> None:
         """Compile the (bs, 4) step once, outside the watchdog — compilation
@@ -472,20 +536,22 @@ class SpatialServer:
 
     # --------------------------------------------------------------- observe
 
-    @staticmethod
-    def _pct(ring, q: float) -> float | None:
-        return float(np.percentile(np.asarray(ring), q)) if ring else None
-
     def metrics(self) -> dict:
-        """Snapshot of the health/metrics surface."""
+        """Snapshot of the health/metrics surface.
+
+        A view over ``self.registry`` keeping the original dict shape:
+        counts come from the ``serve_events_total``/``serve_faults_total``
+        counter families, and latency percentiles are interpolated estimates
+        from the shared fixed-bucket histograms (cumulative since server
+        construction — see :class:`repro.obs.metrics.Histogram`) instead of
+        a re-sorted ring per call."""
         with self._lock:
-            c = dict(self._counters)
-            faults = dict(self._faults)
             depth = len(self._queue)
-            batch_lat = list(self._batch_lat)
-            req_lat = list(self._req_lat)
             health = self.health
             last_fault = self._last_fault
+        c = {k: int(v) for k, v in self._events.as_dict("kind").items()}
+        faults = {k: int(v)
+                  for k, v in self._fault_counter.as_dict("kind").items()}
         submitted = c.get("submitted", 0)
         shed = sum(v for k, v in c.items() if k.startswith("shed_"))
         return {
@@ -504,9 +570,13 @@ class SpatialServer:
             "crosschecks": c.get("crosschecks", 0),
             "faults": faults,
             "last_fault": last_fault,
-            "batch_p50_s": self._pct(batch_lat, 50),
-            "batch_p99_s": self._pct(batch_lat, 99),
-            "request_p50_s": self._pct(req_lat, 50),
-            "request_p99_s": self._pct(req_lat, 99),
+            "batch_p50_s": self._batch_hist.percentile(50),
+            "batch_p90_s": self._batch_hist.percentile(90),
+            "batch_p99_s": self._batch_hist.percentile(99),
+            "request_p50_s": self._req_hist.percentile(50),
+            "request_p90_s": self._req_hist.percentile(90),
+            "request_p99_s": self._req_hist.percentile(99),
+            "queue_wait_p50_s": self._wait_hist.percentile(50),
+            "queue_wait_p99_s": self._wait_hist.percentile(99),
             "counters": c,
         }

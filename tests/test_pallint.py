@@ -25,7 +25,7 @@ def _rules(src, path=SRC_PATH):
 def test_registry_has_full_catalog():
     ids = set(registry())
     assert {"PL101", "PL102", "PL103", "PL104", "PL105", "PL106", "PL107",
-            "PL108", "PL109", "PL110", "PC201", "PC202", "PC203",
+            "PL108", "PL109", "PL110", "PL111", "PC201", "PC202", "PC203",
             "PC204"} <= ids
 
 
@@ -202,6 +202,47 @@ def test_pl110_suppression():
           "    while True:    # pallint: disable=PL110\n"
           "        q.pump()\n")
     assert "PL110" not in _rules(ok, path=SERVE_PATH)
+
+
+_WALL_CLOCK = (
+    "import time\n"
+    "def stamp():\n"
+    "    return time.time()\n"
+)
+
+_HOT_PRINT = (
+    "def pump(q):\n"
+    "    print('served', q)\n"
+)
+
+
+def test_pl111_wall_clock_in_hot_path():
+    for hot in ("src/repro/core/fake.py", "src/repro/serve/fake.py",
+                "src/repro/kernels/fake.py"):
+        assert "PL111" in _rules(_WALL_CLOCK, path=hot)
+    # monotonic clocks are the sanctioned hot-path timebase: quiet
+    ok = ("import time\n"
+          "def stamp():\n"
+          "    return time.monotonic_ns()\n")
+    assert "PL111" not in _rules(ok, path=SERVE_PATH)
+
+
+def test_pl111_print_in_hot_path():
+    assert "PL111" in _rules(_HOT_PRINT, path="src/repro/core/fake.py")
+
+
+def test_pl111_scoped_to_hot_path_modules():
+    # wall clock + print outside core/serve/kernels: PL111 stays quiet
+    assert "PL111" not in _rules(_WALL_CLOCK, path="src/repro/data/fake.py")
+    assert "PL111" not in _rules(_HOT_PRINT, path=SRC_PATH)
+    assert "PL111" not in _rules(_WALL_CLOCK, path=TEST_PATH)
+
+
+def test_pl111_suppression():
+    ok = ("import time\n"
+          "def stamp():\n"
+          "    return time.time()    # pallint: disable=PL111\n")
+    assert "PL111" not in _rules(ok, path=SERVE_PATH)
 
 
 def test_file_level_suppression():

@@ -157,9 +157,37 @@ def test_metrics_latency_percentiles(workload, engine):
     srv.drain()
     m = srv.metrics()
     assert m["batch_p50_s"] is not None and m["batch_p99_s"] is not None
-    assert m["batch_p50_s"] <= m["batch_p99_s"]
+    assert m["batch_p50_s"] <= m["batch_p90_s"] <= m["batch_p99_s"]
     assert m["request_p50_s"] is not None
-    assert m["request_p50_s"] <= m["request_p99_s"]
+    assert m["request_p50_s"] <= m["request_p90_s"] <= m["request_p99_s"]
+    assert m["queue_wait_p50_s"] is not None
+    assert m["queue_wait_p50_s"] <= m["queue_wait_p99_s"]
+
+
+def test_metrics_registry_backed_surface(workload, engine):
+    """metrics() is a read-through over the shared registry: the counters
+    dict keeps its historical int shape, and the same numbers appear in the
+    Prometheus exposition."""
+    _, queries, _ = workload
+    srv = SpatialServer(engine, ServeConfig(batch_size=64, watchdog_s=30.0))
+    for q in queries[:96]:
+        srv.submit(q, deadline_s=60.0)
+    srv.drain()
+    m = srv.metrics()
+    assert isinstance(m["served"], int) and isinstance(m["shed"], int)
+    assert m["served"] == 96 and m["submitted"] == 96
+    text = srv.registry.prometheus_text()
+    assert 'serve_events_total{kind="served"} 96' in text
+    assert "serve_batch_latency_seconds_bucket" in text
+    assert "serve_request_latency_seconds_count 96" in text
+    assert "serve_healthy 1" in text
+    # an externally supplied registry is used as-is (shared scrape surface)
+    from repro.obs import metrics as obs_metrics
+    mine = obs_metrics.Registry()
+    srv2 = SpatialServer(engine, ServeConfig(batch_size=64, watchdog_s=30.0),
+                         registry=mine, warmup=False)
+    assert srv2.registry is mine
+    assert "serve_healthy" in mine.prometheus_text()
 
 
 def test_ref_chunked_twin_matches_loop_oracle():
