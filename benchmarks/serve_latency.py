@@ -1,6 +1,6 @@
 """Tail latency of the fault-tolerant serving loop under Poisson arrival.
 
-Two runs over the same deterministic arrival schedule:
+Single-server section — two runs over one deterministic arrival schedule:
 
 * ``clean`` — healthy steady state; the fast (device) path serves every
   request.
@@ -10,12 +10,24 @@ Two runs over the same deterministic arrival schedule:
   + retry budget while p50 stays near the clean run, and shed/expired/
   degraded rates quantify what availability cost the faults extracted.
 
+Router section (``--replicas N``) — the multi-replica pool behind
+:class:`repro.serve.router.SpatialRouter`, same arrival discipline:
+
+* ``clean``            — healthy pool, hedging off.
+* ``replica_crash``    — one replica crashes mid-run and stays down; the
+  rows quantify what failover costs (reroutes, tail) at zero lost requests.
+* ``straggler``        — one replica's device step is persistently slow,
+  hedging off: the straggler owns the p99.
+* ``straggler_hedged`` — identical fault plan with hedged retries on; the
+  acceptance gate asserts the hedge measurably cuts that p99.
+
 Writes ``BENCH_serve.json`` at the repo root and emits the usual CSV rows.
 
-Usage: ``PYTHONPATH=src:. python -m benchmarks.serve_latency``
+Usage: ``PYTHONPATH=src:. python -m benchmarks.serve_latency [--replicas N]``
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -28,6 +40,7 @@ from repro.core import rtree
 from repro.data import datasets, spider
 from repro.obs import phases as obs_phases
 from repro.obs import trace as obs_trace
+from repro.serve.router import RouterConfig, SpatialRouter
 from repro.serve.spatial_serve import ServeConfig, SpatialServer
 from repro.testing import chaos
 
@@ -43,6 +56,14 @@ FAULT_PLAN = (
     chaos.Fault(chaos.DEVICE_LOSS, at_call=8, count=2),
     chaos.Fault(chaos.CORRUPT, at_call=14, count=1),
 )
+
+# router section: per-request routing overhead caps useful throughput well
+# below the micro-batched single-server number, so the pool sees a lighter
+# open-loop schedule (same Poisson discipline, same seed across all rows)
+ROUTER_REQUESTS = 600
+ROUTER_RATE_QPS = 300.0
+ROUTER_DEADLINE_S = 5.0
+STRAGGLE_DELAY_S = 0.25
 
 
 def _workload(seed: int = 5):
@@ -119,7 +140,132 @@ def _summarize(label: str, srv: SpatialServer, tickets: list,
     return row
 
 
-def run(full: bool = False) -> list[dict]:
+def _drive_router(router: SpatialRouter, queries: np.ndarray,
+                  arrivals: np.ndarray) -> list:
+    """Open-loop load against the pool; blocks until every ticket is
+    terminal (the router never drops a ticket — ok or failed, always)."""
+    tickets = []
+    t0 = time.perf_counter()
+    try:
+        for q, at in zip(queries, arrivals):
+            lag = at - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            tickets.append(router.submit(q, deadline_s=ROUTER_DEADLINE_S))
+        for t in tickets:
+            assert t.wait(timeout=60.0), "router dropped a ticket"
+    finally:
+        router.stop(drain=True, timeout=60.0)
+    return tickets
+
+
+def _summarize_router(label: str, router: SpatialRouter, tickets: list,
+                      want: np.ndarray) -> dict:
+    m = router.metrics()
+    ok = [t for t in tickets if t.status == "ok"]
+    # correctness gate: every routed response bit-equal to the oracle
+    got = np.array([t.count for t in ok], dtype=np.int32)
+    idx = [i for i, t in enumerate(tickets) if t.status == "ok"]
+    np.testing.assert_array_equal(got, want[idx])
+    lat = np.array([t.latency_s for t in ok], dtype=np.float64)
+    row = dict(
+        label=label,
+        requests=len(tickets),
+        completed=len(ok),
+        failed=m["responses_failed"],
+        failovers=m["failovers"],
+        hedges=m["hedges"], hedge_wins=m["hedge_wins"],
+        hedge_cancels=m["hedge_cancels"],
+        ejections=m["ejections"],
+        replicas_healthy=m["replicas_healthy"],
+        replicas={name: snap["state"]
+                  for name, snap in m["replicas"].items()},
+        p50_ms=float(np.percentile(lat, 50) * 1e3) if len(lat) else None,
+        p90_ms=float(np.percentile(lat, 90) * 1e3) if len(lat) else None,
+        p99_ms=float(np.percentile(lat, 99) * 1e3) if len(lat) else None,
+        max_ms=float(lat.max() * 1e3) if len(lat) else None,
+    )
+    common.emit(f"serve_latency/router_{label}/p50",
+                (row["p50_ms"] or 0.0) / 1e3,
+                f"p99_ms={row['p99_ms']:.1f} failed={row['failed']} "
+                f"failovers={row['failovers']} hedges={row['hedges']}")
+    return row
+
+
+def _router_section(tree, queries: np.ndarray, want: np.ndarray,
+                    replicas: int) -> dict:
+    """clean vs replica-crash vs straggler vs straggler+hedged, one fresh
+    pool per row over the identical arrival schedule."""
+    arrivals = _poisson_arrivals(ROUTER_REQUESTS, ROUTER_RATE_QPS, seed=11)
+    queries = queries[:ROUTER_REQUESTS]
+    want = want[:ROUTER_REQUESTS]
+    serve_cfg = ServeConfig(batch_size=128, max_queue=4096,
+                            default_deadline_s=ROUTER_DEADLINE_S,
+                            watchdog_s=5.0, max_retries=2,
+                            backoff_base_s=0.005, backoff_cap_s=0.05,
+                            crosscheck_every=0)
+
+    def _router(hedge: bool = False) -> SpatialRouter:
+        cfg = RouterConfig(num_replicas=replicas, failover_attempts=2,
+                           attempt_timeout_s=2.0,
+                           default_deadline_s=ROUTER_DEADLINE_S,
+                           hedge=hedge, hedge_delay_s=0.05,
+                           crosscheck_every=0, router_workers=16,
+                           poll_interval_s=0.001)
+        return SpatialRouter(
+            lambda: beng.BroadcastEngine(tree, common.mesh1(),
+                                         batch_size=serve_cfg.batch_size),
+            config=cfg, serve_config=serve_cfg)
+
+    section = {"replicas": replicas, "requests": ROUTER_REQUESTS,
+               "rate_qps": ROUTER_RATE_QPS, "deadline_s": ROUTER_DEADLINE_S,
+               "rows": []}
+
+    router = _router()
+    section["rows"].append(_summarize_router(
+        "clean", router, _drive_router(router, queries, arrivals), want))
+
+    # one replica crashes mid-run and never comes back: every request it
+    # would have owned is rerouted; nothing is lost or answered twice
+    router = _router()
+    crash = chaos.ReplicaChaos(
+        [chaos.Fault(chaos.REPLICA_CRASH, at_call=40, count=1, period=1)],
+        seed=40).install(router.replicas()[0])
+    row = _summarize_router(
+        "replica_crash", router, _drive_router(router, queries, arrivals),
+        want)
+    row["fault_plan"] = crash.describe()
+    assert row["failovers"] > 0, crash.describe()
+    section["rows"].append(row)
+
+    # persistent straggler on one replica's device step — first without
+    # hedging (the straggler owns the tail), then the identical plan with
+    # hedged retries on (acceptance: the hedge measurably cuts that p99)
+    straggle_plan = [chaos.Fault(chaos.STRAGGLER, at_call=0, count=1,
+                                 period=1, delay_s=STRAGGLE_DELAY_S)]
+    rows = {}
+    for label, hedge in (("straggler", False), ("straggler_hedged", True)):
+        router = _router(hedge=hedge)
+        inj = chaos.ChaosInjector(list(straggle_plan), seed=41)
+        inj.install(router.replicas()[0].server)
+        row = _summarize_router(
+            label, router, _drive_router(router, queries, arrivals), want)
+        row["fault_plan"] = inj.describe()
+        rows[label] = row
+        section["rows"].append(row)
+
+    plain, hedged = rows["straggler"]["p99_ms"], \
+        rows["straggler_hedged"]["p99_ms"]
+    assert hedged < 0.9 * plain, (
+        f"hedging did not cut the straggler p99: {hedged:.1f}ms vs "
+        f"{plain:.1f}ms plain")
+    section["hedge_p99_cut"] = dict(
+        straggler_p99_ms=plain, hedged_p99_ms=hedged,
+        speedup=plain / hedged)
+    return section
+
+
+def run(full: bool = False, replicas: int = 2) -> list[dict]:
     del full
     rects, queries, tree = _workload()
     from repro.kernels import ref
@@ -154,6 +300,8 @@ def run(full: bool = False) -> list[dict]:
     report["chaos"] = _summarize(
         "chaos", srv, _drive(srv, queries, arrivals), want)
 
+    report["router"] = _router_section(tree, queries, want, replicas)
+
     with open(OUT_PATH, "w") as fh:
         json.dump(report, fh, indent=2, default=float)
     common.emit("serve_latency/report", 0.0,
@@ -162,4 +310,7 @@ def run(full: bool = False) -> list[dict]:
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="pool size for the router section (default 2)")
+    run(replicas=ap.parse_args().replicas)

@@ -42,6 +42,15 @@ PL111 hot-path-wall-clock-io  in hot-path modules (``repro/core/``,
                               or the ``repro.obs`` tracer) and no ``print()``
                               (output goes through metrics/trace, never
                               stdout on the hot path).
+PL112 silent-failover         in serving code (``repro/serve/``): an
+                              ``except`` handler that reroutes work
+                              (``submit``/``resubmit``/``reroute``/
+                              ``failover`` call) without recording the event
+                              (a counter ``.inc``, a trace ``event``, or a
+                              ``_record_*`` helper).  Failover that leaves
+                              no metric/span behind turns a degraded fleet
+                              into an invisible one — every reroute must hit
+                              ``router_failovers_total`` or equivalent.
 
 Detection of "jit-compiled or kernel-adjacent" (PL101): a function is a jit
 context if (a) a decorator references ``jit``, (b) its name is passed as the
@@ -404,6 +413,44 @@ def check_hot_path_wall_clock_io(tree, src, path):
                 "PL111", path, node.lineno,
                 "print() in a hot-path module — emit through repro.obs "
                 "metrics/trace, never stdout on the hot path")
+
+
+_REROUTE_NAMES = {"submit", "resubmit", "reroute", "failover"}
+
+
+def _call_name(node: ast.Call) -> str | None:
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    return None
+
+
+@register("PL112", SCOPE_SRC,
+          "failover must be observable: an except handler that reroutes "
+          "(submit/reroute/failover) must also record it (counter inc, "
+          "trace event, or a _record_* helper)")
+def check_silent_failover(tree, src, path):
+    parts = os.path.normpath(path).split(os.sep)
+    if "serve" not in parts:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        names = {n for n in (
+            _call_name(sub) for sub in ast.walk(node)
+            if isinstance(sub, ast.Call)) if n}
+        reroutes = names & _REROUTE_NAMES
+        if not reroutes:
+            continue
+        recorded = any(n == "inc" or n == "event" or n.startswith("_record")
+                       for n in names)
+        if not recorded:
+            yield Finding(
+                "PL112", path, node.lineno,
+                f"except handler reroutes ({sorted(reroutes)[0]}) without "
+                "recording the failover — increment a failover counter or "
+                "emit a trace event inside the handler")
 
 
 @register("PL109", SCOPE_SRC,

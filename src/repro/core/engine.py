@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import warnings
+import zlib
 from typing import Any, Callable, Sequence
 
 import jax
@@ -146,6 +147,18 @@ class ShardedLayout:
     @property
     def header_bytes(self) -> int:
         return self.cover_mbrs.nbytes // self.num_devices  # broadcast once
+
+    def fingerprint(self) -> str:
+        """Content hash of the placed layout — the layout-version handle.
+
+        Two layouts built from the same rects with the same sharding hash
+        identically; any rebuild (new STR pack, different device count)
+        changes it.  The serving router uses this as its version fence
+        token: a batch is guaranteed to never mix layouts because replicas
+        only pair (route, hedge) within one fingerprint."""
+        h = zlib.crc32(self.leaf_rects_flat.tobytes())
+        h = zlib.crc32(np.ascontiguousarray(self.cover_mbrs).tobytes(), h)
+        return f"{self.num_devices}d-{h:08x}"
 
     @property
     def metadata_bytes(self) -> int:

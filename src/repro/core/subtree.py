@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Callable
 
 import jax
@@ -60,6 +61,13 @@ class SubtreeLayout:
         """Aggregate host→device bytes: every device receives a *distinct*
         serialized subtree (no broadcast reuse)."""
         return int(self.subtree_bytes.sum())
+
+    def fingerprint(self) -> str:
+        """Content hash of the placed layout (layout-version handle; same
+        contract as :meth:`repro.core.engine.ShardedLayout.fingerprint`)."""
+        h = zlib.crc32(np.ascontiguousarray(self.rects).tobytes())
+        h = zlib.crc32(np.ascontiguousarray(self.root_mbrs).tobytes(), h)
+        return f"{self.num_devices}d-{h:08x}"
 
 
 def build_layout(

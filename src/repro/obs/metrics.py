@@ -17,7 +17,9 @@ A deliberately small, dependency-free subset of the Prometheus client model:
 
 ``get_registry()`` returns the process-default registry (used by the pallint
 runtime guards); subsystems that want isolation (``SpatialServer``) create
-their own ``Registry`` and expose it.
+their own ``Registry`` and expose it.  :func:`aggregate_prometheus` merges
+many registries into one scrape surface, tagging each source's series with a
+``replica=...`` label — the router's multi-replica endpoint.
 """
 from __future__ import annotations
 
@@ -284,22 +286,75 @@ class Registry:
         """Prometheus text exposition format 0.0.4."""
         lines: list[str] = []
         for name, inst in sorted(self.instruments().items()):
-            if inst.help:
-                lines.append(f"# HELP {name} {inst.help}")
-            lines.append(f"# TYPE {name} {inst.kind}")
-            if isinstance(inst, (Counter, Gauge)):
-                series = inst.series() or {(): 0.0}
-                for key in sorted(series):
-                    lines.append(f"{name}{_label_str(key)} "
-                                 f"{_format(series[key])}")
-            else:
-                assert isinstance(inst, Histogram)
-                for edge, cum in inst.bucket_counts():
-                    le = "+Inf" if math.isinf(edge) else _format(edge)
-                    lines.append(f'{name}_bucket{{le="{le}"}} {cum}')
-                lines.append(f"{name}_sum {_format(inst.sum)}")
-                lines.append(f"{name}_count {inst.count}")
+            lines.extend(_render_header(name, inst))
+            lines.extend(_render_series(name, inst, ()))
         return "\n".join(lines) + ("\n" if lines else "")
+
+
+def _render_header(name: str, inst) -> list[str]:
+    lines = []
+    if inst.help:
+        lines.append(f"# HELP {name} {inst.help}")
+    lines.append(f"# TYPE {name} {inst.kind}")
+    return lines
+
+
+def _render_series(name: str, inst, extra: tuple[tuple[str, str], ...]
+                   ) -> list[str]:
+    """Sample lines for one instrument, with ``extra`` label pairs merged
+    into every series (how aggregation tags per-replica registries)."""
+    lines: list[str] = []
+    if isinstance(inst, (Counter, Gauge)):
+        series = inst.series() or {(): 0.0}
+        for key in sorted(series):
+            merged = tuple(sorted(extra + key))
+            lines.append(f"{name}{_label_str(merged)} "
+                         f"{_format(series[key])}")
+    else:
+        assert isinstance(inst, Histogram)
+        for edge, cum in inst.bucket_counts():
+            le = "+Inf" if math.isinf(edge) else _format(edge)
+            merged = tuple(sorted((("le", le),) + extra))
+            lines.append(f"{name}_bucket{_label_str(merged)} {cum}")
+        lines.append(f"{name}_sum{_label_str(extra)} {_format(inst.sum)}")
+        lines.append(f"{name}_count{_label_str(extra)} {inst.count}")
+    return lines
+
+
+def aggregate_prometheus(
+    named: Mapping[str, Registry],
+    *,
+    label: str = "replica",
+    base: Registry | None = None,
+) -> str:
+    """One Prometheus surface over many registries (the router's scrape
+    endpoint: per-replica server registries + the router's own).
+
+    Every series from ``named[name]`` is tagged ``{label}="name"``; series
+    from ``base`` (if given) stay unlabeled.  Instruments sharing a metric
+    name across sources are merged under one HELP/TYPE block (exposition
+    format requires each name to appear exactly once), with the first
+    non-empty help string winning."""
+    groups: dict[str, list[tuple[tuple[tuple[str, str], ...], object]]] = {}
+    if base is not None:
+        for name, inst in sorted(base.instruments().items()):
+            groups.setdefault(name, []).append(((), inst))
+    for src in sorted(named):
+        extra = ((label, str(src)),)
+        for name, inst in sorted(named[src].instruments().items()):
+            groups.setdefault(name, []).append((extra, inst))
+    lines: list[str] = []
+    for name in sorted(groups):
+        entries = groups[name]
+        kinds = {inst.kind for _, inst in entries}
+        if len(kinds) > 1:
+            raise TypeError(f"metric {name!r} registered with conflicting "
+                            f"kinds across sources: {sorted(kinds)}")
+        head = next((inst for _, inst in entries if inst.help), entries[0][1])
+        lines.extend(_render_header(name, head))
+        for extra, inst in entries:
+            lines.extend(_render_series(name, inst, extra))
+    return "\n".join(lines) + ("\n" if lines else "")
 
 
 def _format(v: float) -> str:

@@ -1,0 +1,783 @@
+"""Multi-replica spatial serving: health-checked router with failover,
+hedged retries, and layout-version-aware draining (DESIGN.md Sec 13).
+
+:mod:`repro.serve.spatial_serve` made one engine survivable; this module
+makes the *service* survivable.  A :class:`SpatialRouter` fronts a
+shared-nothing pool of :class:`Replica`\\ s — each replica owns its own
+placed layout and its own :class:`~repro.serve.spatial_serve.SpatialServer`
+(own registry, own fault state, own degradation path), so replicas share no
+device buffers, no queues, and no failure domains.  The host-side analogue
+of the paper's many-independent-DPUs orchestration (PIMDAL, PAPERS.md): the
+router is the rank-0 coordinator, replicas are the memory units.
+
+What the router does:
+
+* **Health-checked routing** — each replica carries an EWMA health score fed
+  by heartbeat probes (a known-answer whole-domain query cross-checked
+  against the host rect count) combined with the server's own
+  ``serve_healthy`` gauge and fault counters.  Routing prefers healthy
+  replicas and breaks ties by queue load (least-loaded, round-robin on
+  equal load).
+* **Bounded failover** — a failed or timed-out attempt reroutes to the next
+  healthy replica with capped exponential backoff, at most
+  ``failover_attempts`` reroutes per request (PL110 doctrine: bounded, never
+  except-and-retry-forever), and every reroute increments
+  ``router_failovers_total{replica,reason}`` *and* emits a trace event —
+  pallint PL112 machine-checks that no failover in ``src/**/serve/`` is
+  silent.
+* **Hedged retries** — optionally, a request still unanswered after a
+  p99-derived delay is duplicated to a second replica *of the same layout
+  version*; the first exact answer wins and the loser is cancelled
+  (``SpatialServer.cancel``) if still queued.  The tail-at-scale recipe:
+  hedging converts a straggler's p99 into roughly the p50 of two draws.
+* **Layout-version-aware draining** — :meth:`SpatialRouter.swap_layout`
+  rolls the pool replica-by-replica: warm the new-version replica, activate
+  it, *then* drain the old one (in-flight requests finish on the layout they
+  started on) and retire it.  The version fence is structural: a micro-batch
+  lives inside exactly one ``SpatialServer`` which owns exactly one
+  immutable placed layout, and cross-replica moves (routing, hedging,
+  failover) only pair replicas whose ``layout_version`` matches the pool's
+  current serving version — so no batch can ever mix layouts, and zero
+  in-flight requests are dropped during a swap.
+* **One observability surface** — the router's own counters
+  (``router_failovers_total``, ``router_hedges_total``,
+  ``router_replicas_healthy``, ...) plus every replica's server registry,
+  merged by :func:`repro.obs.metrics.aggregate_prometheus` with a
+  ``replica=<name>`` label per source.
+
+Replica-level fault injection (crash / hang / poison) lives in
+:class:`repro.testing.chaos.ReplicaChaos`; the chaos-router suite drives a
+rolling swap under crash + straggler and asserts zero dropped / zero
+duplicated responses, all bit-equal to the single-replica reference.
+
+In no-fault steady state routed counts are bit-equal to
+``BroadcastEngine.query`` — same server, same padding, same Morton ordering.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Callable, Mapping
+
+import numpy as np
+
+from repro.core.engine import validate_queries
+from repro.kernels import ref
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.serve import spatial_serve
+
+# Replica lifecycle states (DESIGN.md Sec 13 state machine).
+WARMING = "warming"       # engine building / step compiling; not routable
+ACTIVE = "active"         # serving; routable
+DRAINING = "draining"     # finishing in-flight work; not routable
+RETIRED = "retired"       # drained and stopped (normal end of life)
+EJECTED = "ejected"       # removed for cause (poisoned / persistent faults)
+
+STATUS_FAILED = "failed"  # router ticket terminal state when all else fails
+
+
+class ReplicaUnavailableError(RuntimeError):
+    """Submit refused because the replica is not ACTIVE (the version/state
+    fence: a draining or retired replica accepts no new work)."""
+
+
+class Replica:
+    """One shared-nothing serving replica: engine + server + lifecycle.
+
+    ``engine_factory`` is called once (in ``__init__``, i.e. while WARMING)
+    and must return a fully placed engine (``BroadcastEngine`` /
+    ``SubtreeEngine``); compilation happens here so activation is cheap and
+    a warming replica never counts against serving capacity.
+
+    ``layout_version`` defaults to the placed layout's content fingerprint
+    (:meth:`repro.core.engine.ShardedLayout.fingerprint`) so two replicas
+    built from the same tree agree on a version without coordination.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        engine_factory: Callable[[], object],
+        serve_config: spatial_serve.ServeConfig | None = None,
+        *,
+        layout_version: str | None = None,
+        registry: obs_metrics.Registry | None = None,
+    ):
+        self.name = name
+        self.state = WARMING
+        self.registry = registry if registry is not None else (
+            obs_metrics.Registry())
+        self.engine = engine_factory()
+        if layout_version is None:
+            fp = getattr(self.engine.layout, "fingerprint", None)
+            layout_version = fp() if callable(fp) else "v0"
+        self.layout_version = layout_version
+        self.server = spatial_serve.SpatialServer(
+            self.engine, serve_config, registry=self.registry)
+        self.health_score = 1.0
+        self._lock = threading.Lock()
+        self._inflight = 0
+        self._probe_want: int | None = None
+        self._last_fault_total = 0.0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def activate(self) -> None:
+        self.server.start()
+        self.state = ACTIVE
+
+    def begin_drain(self) -> None:
+        """Stop accepting new work; in-flight requests keep their slots."""
+        self.state = DRAINING
+
+    def retire(self, timeout: float = 30.0) -> None:
+        """Drain the server queue and stop the worker (end of life)."""
+        self.server.stop(drain=True, timeout=timeout)
+        if self.state != EJECTED:
+            self.state = RETIRED
+
+    # -- serving -----------------------------------------------------------
+
+    def submit(self, rect, *, deadline_s: float):
+        """Forward one request to this replica's server.
+
+        The state fence lives here: only an ACTIVE replica accepts work, so
+        a request can never land on a draining/retired/ejected replica (and
+        therefore never on a layout being swapped out)."""
+        if self.state != ACTIVE:
+            raise ReplicaUnavailableError(
+                f"replica {self.name!r} is {self.state}, not active")
+        return self.server.submit(rect, deadline_s=deadline_s)
+
+    def note_inflight(self, delta: int) -> None:
+        with self._lock:
+            self._inflight += delta
+
+    @property
+    def inflight(self) -> int:
+        with self._lock:
+            return self._inflight
+
+    def queue_load(self) -> int:
+        """Routing load signal: queued at the server + router in-flight."""
+        return self.server.queue_depth + self.inflight
+
+    # -- health ------------------------------------------------------------
+
+    @property
+    def probe_want(self) -> int:
+        """Known answer for the heartbeat probe: a whole-domain query must
+        count every live rect on this replica's layout."""
+        if self._probe_want is None:
+            self._probe_want = int(self.server._host_rects.shape[0])
+        return self._probe_want
+
+    def probe_rect(self) -> np.ndarray:
+        hr = self.server._host_rects
+        return np.array([hr[:, 0].min(), hr[:, 1].min(),
+                         hr[:, 2].max(), hr[:, 3].max()], dtype=np.int32)
+
+    def fault_delta(self) -> float:
+        """Server faults since the last health update (EWMA penalty input)."""
+        total = self.server._fault_counter.total()
+        delta = total - self._last_fault_total
+        self._last_fault_total = total
+        return delta
+
+    def snapshot(self) -> dict:
+        return {
+            "state": self.state,
+            "layout_version": self.layout_version,
+            "health_score": self.health_score,
+            "server_health": self.server.health,
+            "queue_load": self.queue_load(),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Router policy knobs (every bound the chaos-router suite exercises)."""
+
+    num_replicas: int = 2
+    # failover
+    failover_attempts: int = 2      # reroutes per request beyond the first
+    attempt_timeout_s: float = 5.0  # per-attempt wait bound (hang cover)
+    backoff_base_s: float = 0.01    # capped exponential between reroutes
+    backoff_cap_s: float = 0.25
+    default_deadline_s: float = 1.0
+    # hedging
+    hedge: bool = False
+    hedge_delay_s: float = 0.05       # cold-start delay before p99 exists
+    hedge_after_observations: int = 64  # switch to p99-derived after this
+    hedge_floor_s: float = 0.002      # never hedge faster than this
+    # health
+    min_health: float = 0.5           # prefer replicas at/above this score
+    health_alpha: float = 0.5         # EWMA step toward each probe outcome
+    degraded_weight: float = 0.6      # probe outcome weight while degraded
+    fault_penalty: float = 0.5        # per-new-fault multiplicative penalty
+    routing_failure_decay: float = 0.25  # score *= (1-this) on submit error
+    probe_interval_s: float = 0.0     # 0 = manual probe() only
+    probe_deadline_s: float = 2.0
+    # correctness
+    crosscheck_every: int = 32        # router-level sampled oracle check
+    # lifecycle
+    drain_timeout_s: float = 30.0
+    # plumbing
+    router_workers: int = 8
+    poll_interval_s: float = 0.002
+
+
+class RouterTicket:
+    """One routed request: completion event + result + routing trail.
+
+    ``status`` is ``ok`` or ``failed`` (``pending`` until completed);
+    ``replica`` / ``layout_version`` record who answered on which layout,
+    ``attempts`` how many submissions were made (1 = no failover), and
+    ``hedged`` whether a duplicate was issued.  Completion is exactly-once
+    by construction (``_complete`` is guarded), so a late primary and a
+    hedge can never both release a result."""
+
+    __slots__ = ("rect", "submit_t", "deadline", "status", "reason", "count",
+                 "replica", "layout_version", "path", "hedged", "attempts",
+                 "latency_s", "_event", "_lock")
+
+    def __init__(self, rect: np.ndarray, submit_t: float, deadline: float):
+        self.rect = rect
+        self.submit_t = submit_t
+        self.deadline = deadline
+        self.status = spatial_serve.STATUS_PENDING
+        self.reason = None
+        self.count = None
+        self.replica = None
+        self.layout_version = None
+        self.path = None
+        self.hedged = False
+        self.attempts = 0
+        self.latency_s = None
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        return self._event.wait(timeout)
+
+    def _complete(self, **fields) -> bool:
+        """Set terminal fields exactly once; False if already completed."""
+        with self._lock:
+            if self._event.is_set():
+                return False
+            for k, v in fields.items():
+                setattr(self, k, v)
+            self._event.set()
+            return True
+
+
+class SpatialRouter:
+    """Health-checked router over a pool of shared-nothing replicas.
+
+    ``submit`` is thread-safe and non-blocking: each request is driven to
+    completion (route → await → failover/hedge → verify → complete) by one
+    worker from an internal pool, so a straggling replica never blocks
+    admission.  ``swap_layout`` rolls the pool to a new index build with
+    zero dropped in-flight requests.
+    """
+
+    def __init__(
+        self,
+        engine_factory: Callable[[], object],
+        *,
+        config: RouterConfig | None = None,
+        serve_config: spatial_serve.ServeConfig | None = None,
+        layout_version: str | None = None,
+        registry: obs_metrics.Registry | None = None,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        self.config = config or RouterConfig()
+        self._serve_config = serve_config
+        self._clock = clock
+        self._sleep = sleep
+
+        self.registry = registry if registry is not None else (
+            obs_metrics.Registry())
+        r = self.registry
+        self._requests = r.counter(
+            "router_requests_total", "requests admitted by the router")
+        self._responses = r.counter(
+            "router_responses_total", "terminal responses by status")
+        self._failovers = r.counter(
+            "router_failovers_total",
+            "reroutes after a replica attempt failed, by replica and reason")
+        self._hedges = r.counter(
+            "router_hedges_total", "hedged duplicates issued")
+        self._hedge_wins = r.counter(
+            "router_hedge_wins_total", "requests answered by the hedge")
+        self._hedge_cancels = r.counter(
+            "router_hedge_cancels_total",
+            "losing duplicates cancelled before being served")
+        self._ejections = r.counter(
+            "router_ejections_total", "replicas removed for cause")
+        self._swaps = r.counter(
+            "router_layout_swaps_total", "completed rolling layout swaps")
+        self._probe_failures = r.counter(
+            "router_probe_failures_total", "failed heartbeat probes")
+        self._crosschecks = r.counter(
+            "router_crosschecks_total", "router-level sampled oracle checks")
+        self._healthy_gauge = r.gauge(
+            "router_replicas_healthy",
+            "active replicas at/above the min_health score")
+        self._state_gauge = r.gauge(
+            "router_replicas", "replicas by lifecycle state")
+        self._req_hist = r.histogram(
+            "router_request_latency_seconds",
+            "submit-to-completion latency of routed requests")
+
+        self._lock = threading.Lock()          # replica list + rr counter
+        self._swap_lock = threading.Lock()     # one swap at a time
+        self._replicas: list[Replica] = []
+        self._retired: list[Replica] = []
+        self._rr = itertools.count()
+        self._completions = 0
+        self._accepting = True
+        self._stop_evt = threading.Event()
+        self._probe_thread: threading.Thread | None = None
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=self.config.router_workers,
+            thread_name_prefix="spatial-router")
+
+        self.layout_version = None
+        for i in range(self.config.num_replicas):
+            rep = self._add_replica(f"r{i}", engine_factory, layout_version)
+            if self.layout_version is None:
+                self.layout_version = rep.layout_version
+        self._update_pool_gauges()
+
+    # -- pool management ---------------------------------------------------
+
+    def _add_replica(self, name: str, factory, version: str | None) -> Replica:
+        rep = Replica(name, factory, self._serve_config,
+                      layout_version=version)
+        rep.activate()
+        with self._lock:
+            self._replicas.append(rep)
+        obs_trace.event("router.replica_active", replica=name,
+                        version=rep.layout_version)
+        return rep
+
+    def replicas(self) -> list[Replica]:
+        with self._lock:
+            return list(self._replicas)
+
+    def _eject(self, rep: Replica, reason: str) -> None:
+        """Remove a replica for cause (wrong answers / persistent faults)."""
+        with self._lock:
+            if rep.state == EJECTED:
+                return
+            rep.state = EJECTED
+            rep.health_score = 0.0
+        self._ejections.inc(reason=reason)
+        obs_trace.event("router.eject", replica=rep.name, reason=reason)
+        rep.server.stop(drain=False, timeout=1.0)
+        self._update_pool_gauges()
+
+    def _update_pool_gauges(self) -> None:
+        reps = self.replicas()
+        healthy = sum(1 for r in reps if r.state == ACTIVE
+                      and r.health_score >= self.config.min_health)
+        self._healthy_gauge.set(healthy)
+        counts = collections.Counter(r.state for r in reps + self._retired)
+        for state in (WARMING, ACTIVE, DRAINING, RETIRED, EJECTED):
+            self._state_gauge.set(counts.get(state, 0), state=state)
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, rect, *, deadline_s: float | None = None) -> RouterTicket:
+        """Admit one range-count request; a worker drives it to completion.
+
+        Always returns a ticket; terminal status is ``ok`` (with ``count``)
+        or ``failed`` (with ``reason``) — never silently dropped."""
+        arr = np.asarray(rect)
+        if arr.shape == (4,):
+            arr = arr.reshape(1, 4)
+        validated = validate_queries(
+            arr, strict=True, where="SpatialRouter.submit")[0]
+        now = self._clock()
+        if deadline_s is None:
+            deadline_s = self.config.default_deadline_s
+        task = RouterTicket(validated, now, now + deadline_s)
+        self._requests.inc()
+        if not self._accepting:
+            self._finish(task, reason="stopped")
+            return task
+        self._pool.submit(self._run_task, task)
+        return task
+
+    def _run_task(self, task: RouterTicket) -> None:
+        try:
+            self._serve_one(task)
+        except Exception as e:
+            # Last-resort net: a router bug must still fail the ticket
+            # explicitly — a routed request is never dropped on the floor.
+            self._finish(task, reason=f"internal:{type(e).__name__}")
+        if not task.done:
+            self._finish(task, reason="exhausted")
+
+    # -- the per-request routing loop -------------------------------------
+
+    def _serve_one(self, task: RouterTicket) -> None:
+        cfg = self.config
+        tried: set[str] = set()
+        for attempt in range(cfg.failover_attempts + 1):
+            if self._clock() >= task.deadline:
+                self._finish(task, reason="deadline")
+                return
+            rep = self._pick(tried)
+            if rep is None and tried:
+                tried = set()              # every replica tried once: reset
+                rep = self._pick(tried)
+            if rep is None:
+                self._finish(task, reason="no_replicas")
+                return
+            tried.add(rep.name)
+            task.attempts += 1
+            try:
+                budget = task.deadline - self._clock()
+                sub = rep.submit(task.rect, deadline_s=budget)
+            except Exception as e:
+                self._record_failover(rep, type(e).__name__)
+                self._note_routing_failure(rep)
+                self._backoff(attempt)
+                continue
+            rep.note_inflight(+1)
+            try:
+                if self._await(task, rep, sub, tried):
+                    return
+            finally:
+                rep.note_inflight(-1)
+            self._record_failover(rep, sub.status if sub.done else "timeout")
+            self._note_routing_failure(rep)
+            self._backoff(attempt)
+        self._finish(task, reason="exhausted")
+
+    def _await(self, task: RouterTicket, rep: Replica, sub,
+               tried: set[str]) -> bool:
+        """Poll one submitted attempt to a verdict; optionally hedge.
+
+        One worker drives both the primary and its hedge, so completion is
+        single-threaded per request (the ticket ``_complete`` lock is the
+        belt-and-braces second line).  Returns True iff the task completed."""
+        cfg = self.config
+        deadline_eff = min(task.deadline,
+                           self._clock() + cfg.attempt_timeout_s)
+        hedge_rep = hedge_sub = None
+        hedge_at = (self._clock() + self._hedge_delay()
+                    if cfg.hedge else None)
+        try:
+            while True:
+                if rep.state == EJECTED and not sub.done:
+                    return False           # waiters on an ejected replica bail
+                if sub.done:
+                    if self._accept(task, rep, sub):
+                        self._cancel_hedge(hedge_rep, hedge_sub)
+                        return True
+                    self._cancel_hedge(hedge_rep, hedge_sub)
+                    return False
+                if hedge_sub is not None and hedge_sub.done:
+                    if self._accept(task, hedge_rep, hedge_sub,
+                                    hedged=True):
+                        self._hedge_wins.inc()
+                        self._cancel_hedge(rep, sub)
+                        return True
+                    hedge_rep.note_inflight(-1)    # hedge failed; primary on
+                    hedge_rep = hedge_sub = None
+                now = self._clock()
+                if now >= deadline_eff:
+                    self._cancel_hedge(rep, sub)
+                    if hedge_sub is not None:
+                        self._cancel_hedge(hedge_rep, hedge_sub)
+                    return False
+                if (hedge_at is not None and hedge_sub is None
+                        and now >= hedge_at):
+                    hedge_at = None        # one hedge per attempt
+                    hedge_rep, hedge_sub = self._issue_hedge(task, rep, tried)
+                self._sleep(cfg.poll_interval_s)
+        finally:
+            if hedge_rep is not None:
+                hedge_rep.note_inflight(-1)
+
+    def _issue_hedge(self, task: RouterTicket, primary: Replica,
+                     tried: set[str]):
+        """Duplicate the request to a second same-version replica."""
+        rep = self._pick(tried | {primary.name},
+                         version=primary.layout_version)
+        if rep is None:
+            return None, None
+        try:
+            budget = task.deadline - self._clock()
+            sub = rep.submit(task.rect, deadline_s=budget)
+        except Exception as e:
+            self._record_failover(rep, type(e).__name__)
+            self._note_routing_failure(rep)
+            return None, None
+        rep.note_inflight(+1)
+        task.hedged = True
+        self._hedges.inc()
+        obs_trace.event("router.hedge", primary=primary.name,
+                        hedge=rep.name)
+        return rep, sub
+
+    def _cancel_hedge(self, rep: Replica | None, sub) -> None:
+        """Withdraw the losing duplicate if it is still queued (a duplicate
+        already mid-batch finishes and is discarded — duplicate *work* is
+        tolerated, duplicate *responses* are not)."""
+        if rep is None or sub is None or sub.done:
+            return
+        if rep.server.cancel(sub, reason="hedge_lost"):
+            self._hedge_cancels.inc()
+
+    def _hedge_delay(self) -> float:
+        cfg = self.config
+        if self._req_hist.count >= cfg.hedge_after_observations:
+            p99 = self._req_hist.percentile(99)
+            if p99 is not None:
+                return max(p99, cfg.hedge_floor_s)
+        return max(cfg.hedge_delay_s, cfg.hedge_floor_s)
+
+    # -- completion --------------------------------------------------------
+
+    def _accept(self, task: RouterTicket, rep: Replica, sub,
+                *, hedged: bool = False) -> bool:
+        """Judge one finished server ticket; complete the task on success."""
+        if sub.status != spatial_serve.STATUS_OK:
+            return False                   # shed/expired/cancelled: not ours
+        if not self._verify(task, rep, sub):
+            return False                   # poisoned: replica ejected
+        now = self._clock()
+        latency = now - task.submit_t
+        if task._complete(status=spatial_serve.STATUS_OK, count=sub.count,
+                          replica=rep.name,
+                          layout_version=rep.layout_version,
+                          path=sub.path, latency_s=latency):
+            self._responses.inc(status="ok")
+            self._req_hist.observe(latency)
+        return True
+
+    def _verify(self, task: RouterTicket, rep: Replica, sub) -> bool:
+        """Router-level sampled oracle cross-check (poisoned-replica net).
+
+        The replica's own server cross-checks its batches, but a poisoned
+        step can still return plausible in-bounds counts; sampling here —
+        above the replica boundary — catches a replica that lies
+        consistently, and ejects it."""
+        cfg = self.config
+        if cfg.crosscheck_every <= 0:
+            return True
+        with self._lock:
+            self._completions += 1
+            sampled = self._completions % cfg.crosscheck_every == 0
+        if not sampled:
+            return True
+        self._crosschecks.inc()
+        want = int(ref.overlap_counts_np_chunked(
+            task.rect.reshape(1, 4), rep.server._host_rects)[0])
+        if int(sub.count) == want:
+            return True
+        self._eject(rep, "poisoned")
+        return False
+
+    def _finish(self, task: RouterTicket, *, reason: str) -> None:
+        if task._complete(status=STATUS_FAILED, reason=reason,
+                          latency_s=self._clock() - task.submit_t):
+            self._responses.inc(status="failed")
+            obs_trace.event("router.fail", reason=reason)
+
+    def _record_failover(self, rep: Replica, reason: str) -> None:
+        self._failovers.inc(replica=rep.name, reason=reason)
+        obs_trace.event("router.failover", replica=rep.name, reason=reason)
+
+    def _note_routing_failure(self, rep: Replica) -> None:
+        rep.health_score *= 1.0 - self.config.routing_failure_decay
+        self._update_pool_gauges()
+
+    def _backoff(self, attempt: int) -> None:
+        self._sleep(min(self.config.backoff_base_s * (2 ** attempt),
+                        self.config.backoff_cap_s))
+
+    # -- routing policy ----------------------------------------------------
+
+    def _pick(self, exclude: set[str],
+              version: str | None = None) -> Replica | None:
+        """Least-loaded healthy ACTIVE replica not in ``exclude``.
+
+        ``version`` pins the choice to one layout version (hedge pairing);
+        unpinned picks are implicitly fenced too, because only ACTIVE
+        replicas are candidates and a swap drains old-version replicas out
+        of ACTIVE before the pool serves two versions steadily."""
+        cfg = self.config
+        with self._lock:
+            cands = [r for r in self._replicas
+                     if r.state == ACTIVE and r.name not in exclude
+                     and (version is None or r.layout_version == version)]
+            rr = next(self._rr)
+        if not cands:
+            return None
+        healthy = [r for r in cands if r.health_score >= cfg.min_health]
+        pool = healthy or cands            # all sick: still route (degraded)
+        load = min(r.queue_load() for r in pool)
+        tied = [r for r in pool if r.queue_load() == load]
+        return tied[rr % len(tied)]
+
+    # -- health probes -----------------------------------------------------
+
+    def probe(self) -> dict[str, bool]:
+        """One heartbeat round: known-answer query per ACTIVE replica.
+
+        Returns ``{name: ok}`` and folds each outcome into the replica's
+        EWMA health score (weighted down while the server is degraded,
+        multiplied down per new server fault since the last round)."""
+        cfg = self.config
+        results: dict[str, bool] = {}
+        for rep in self.replicas():
+            if rep.state != ACTIVE:
+                continue
+            ok = self._probe_one(rep)
+            results[rep.name] = ok
+            outcome = 1.0 if ok else 0.0
+            if ok and rep.server.health == spatial_serve.DEGRADED:
+                outcome = cfg.degraded_weight
+            outcome *= cfg.fault_penalty ** min(rep.fault_delta(), 3.0)
+            rep.health_score = ((1.0 - cfg.health_alpha) * rep.health_score
+                                + cfg.health_alpha * outcome)
+            if not ok:
+                self._probe_failures.inc(replica=rep.name)
+                obs_trace.event("router.probe_fail", replica=rep.name)
+        self._update_pool_gauges()
+        return results
+
+    def _probe_one(self, rep: Replica) -> bool:
+        try:
+            t = rep.submit(rep.probe_rect(),
+                           deadline_s=self.config.probe_deadline_s)
+        except Exception:
+            return False
+        if not t.wait(self.config.probe_deadline_s + 0.5):
+            return False
+        return (t.status == spatial_serve.STATUS_OK
+                and int(t.count) == rep.probe_want)
+
+    def start(self) -> None:
+        """Start the periodic heartbeat prober (no-op when interval is 0)."""
+        if self.config.probe_interval_s <= 0 or self._probe_thread is not None:
+            return
+        self._stop_evt.clear()
+
+        def loop():
+            while not self._stop_evt.wait(self.config.probe_interval_s):
+                self.probe()
+
+        self._probe_thread = threading.Thread(
+            target=loop, name="router-probe", daemon=True)
+        self._probe_thread.start()
+
+    # -- rolling layout swap ----------------------------------------------
+
+    def swap_layout(self, engine_factory: Callable[[], object],
+                    *, version: str | None = None) -> None:
+        """Roll the pool onto a new index build, replica by replica.
+
+        For each old-version replica: warm + activate its same-name
+        successor on the new layout, *then* drain the old one (it finishes
+        every request it accepted — zero dropped in-flight) and retire it.
+        New requests route to whatever is ACTIVE at pick time; each request
+        is answered entirely by one replica on one layout, so no batch ever
+        mixes versions (machine-checked in tests/test_router.py)."""
+        with self._swap_lock:
+            old = [r for r in self.replicas() if r.state == ACTIVE]
+            new_version = version
+            for i, rep in enumerate(old):
+                nrep = self._add_replica(
+                    f"{rep.name}'", engine_factory, version)
+                if new_version is None:
+                    new_version = nrep.layout_version
+                obs_trace.event("router.swap_step", old=rep.name,
+                                new=nrep.name, version=nrep.layout_version)
+                rep.begin_drain()
+                self._drain_replica(rep)
+                rep.retire(self.config.drain_timeout_s)
+                with self._lock:
+                    self._replicas.remove(rep)
+                    self._retired.append(rep)
+                self._update_pool_gauges()
+            self.layout_version = new_version
+            self._swaps.inc()
+            obs_trace.event("router.swap_done", version=new_version)
+
+    def _drain_replica(self, rep: Replica) -> None:
+        """Bounded wait for router in-flight work on ``rep`` to finish."""
+        deadline = self._clock() + self.config.drain_timeout_s
+        while self._clock() < deadline:
+            if rep.inflight == 0 and rep.server.queue_depth == 0:
+                return
+            self._sleep(self.config.poll_interval_s)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
+        self._accepting = False
+        self._stop_evt.set()
+        if self._probe_thread is not None:
+            self._probe_thread.join(timeout)
+            self._probe_thread = None
+        self._pool.shutdown(wait=drain)
+        for rep in self.replicas():
+            rep.server.stop(drain=drain, timeout=timeout)
+        self._update_pool_gauges()
+
+    # -- observability -----------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Router health surface (the dict the bench/demo persist)."""
+        self._update_pool_gauges()     # health scores may have moved since
+        reps = self.replicas()
+        return {
+            "layout_version": self.layout_version,
+            "replicas": {r.name: r.snapshot() for r in reps},
+            "replicas_healthy": int(self._healthy_gauge.value()),
+            "requests": int(self._requests.value()),
+            "responses_ok": int(self._responses.value(status="ok")),
+            "responses_failed": int(self._responses.value(status="failed")),
+            "failovers": int(self._failovers.total()),
+            "hedges": int(self._hedges.value()),
+            "hedge_wins": int(self._hedge_wins.value()),
+            "hedge_cancels": int(self._hedge_cancels.value()),
+            "ejections": int(self._ejections.total()),
+            "layout_swaps": int(self._swaps.value()),
+            "crosschecks": int(self._crosschecks.value()),
+            "request_p50_s": self._req_hist.percentile(50),
+            "request_p99_s": self._req_hist.percentile(99),
+        }
+
+    def _replica_registries(self) -> Mapping[str, obs_metrics.Registry]:
+        return {r.name: r.registry
+                for r in self.replicas() + self._retired}
+
+    def prometheus_text(self) -> str:
+        """One scrape surface: router series unlabeled, every replica's
+        server series tagged ``replica=<name>``."""
+        return obs_metrics.aggregate_prometheus(
+            self._replica_registries(), label="replica", base=self.registry)
+
+    def snapshot(self) -> dict:
+        return {
+            "router": self.registry.snapshot(),
+            "replicas": {name: reg.snapshot()
+                         for name, reg in self._replica_registries().items()},
+        }

@@ -77,6 +77,7 @@ STATUS_PENDING = "pending"
 STATUS_OK = "ok"
 STATUS_SHED = "shed"
 STATUS_EXPIRED = "expired"
+STATUS_CANCELLED = "cancelled"
 
 PATH_FAST = "fast"
 PATH_REF = "ref"
@@ -93,9 +94,10 @@ class CorruptOutputError(RuntimeError):
 class SpatialTicket:
     """One submitted request: completion event + result fields.
 
-    ``status`` is one of ``ok`` / ``shed`` / ``expired`` (or ``pending``
-    until completed); ``path`` records which execution path answered
-    (``fast`` or ``ref``), ``reason`` why a request was shed."""
+    ``status`` is one of ``ok`` / ``shed`` / ``expired`` / ``cancelled``
+    (or ``pending`` until completed); ``path`` records which execution path
+    answered (``fast`` or ``ref``), ``reason`` why a request was shed or
+    cancelled."""
 
     __slots__ = ("rect", "submit_t", "deadline", "status", "reason",
                  "count", "path", "latency_s", "_event")
@@ -188,7 +190,6 @@ class SpatialServer:
         self._accepting = True
         self._stop_evt = threading.Event()
         self._thread: threading.Thread | None = None
-        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
 
         self.health = HEALTHY
         self._served_batches = 0
@@ -240,6 +241,10 @@ class SpatialServer:
             deadline_s = self.config.default_deadline_s
         ticket = SpatialTicket(validated, now, now + deadline_s)
         self._events.inc(kind="submitted")
+        if deadline_s <= 0:
+            # Already expired at submit: shed immediately instead of letting
+            # a dead request occupy a batch slot until pump() notices.
+            return self._shed(ticket, "deadline", now)
         with self._lock:
             if not self._accepting:
                 return self._shed(ticket, "stopped", now)
@@ -264,6 +269,31 @@ class SpatialServer:
         ticket.latency_s = now - ticket.submit_t
         ticket._event.set()
         return ticket
+
+    def cancel(self, ticket: SpatialTicket, reason: str = "cancelled") -> bool:
+        """Withdraw a still-queued request (e.g. a hedged duplicate whose
+        twin already answered).  Returns True iff the ticket was removed
+        before batch formation; a ticket already being served (or done)
+        cannot be cancelled and keeps its eventual result."""
+        with self._lock:
+            try:
+                self._queue.remove(ticket)
+            except ValueError:
+                return False
+            self._queue_gauge.set(len(self._queue))
+        self._events.inc(kind="cancelled")
+        obs_trace.event("serve.cancel", reason=reason)
+        ticket.status = STATUS_CANCELLED
+        ticket.reason = reason
+        ticket.latency_s = self._clock() - ticket.submit_t
+        ticket._event.set()
+        return True
+
+    @property
+    def queue_depth(self) -> int:
+        """Current admitted-but-unserved requests (router load signal)."""
+        with self._lock:
+            return len(self._queue)
 
     # ------------------------------------------------------------------ serve
 
@@ -375,10 +405,10 @@ class SpatialServer:
     def _fast_batch(self, padded: np.ndarray) -> np.ndarray:
         """One watchdog-guarded fast-path attempt: stage → step → retrieve.
 
-        The stage/step/retrieve spans open on the *pool* thread, so their
-        self-times parent under that thread's ``serve.batch`` span; the pump
-        thread deliberately does not wrap its wait on the future — that would
-        double-count the same wall time from a second thread."""
+        The stage/step/retrieve spans open on the guarded *worker* thread,
+        so their self-times parent under that thread's ``serve.batch`` span;
+        the pump thread deliberately does not wrap its wait on the future —
+        that would double-count the same wall time from a second thread."""
 
         def call():
             with obs_trace.span("serve.batch", phase=obs_phases.HOST,
@@ -401,14 +431,26 @@ class SpatialServer:
                 with obs_trace.span("serve.retrieve", phase=obs_phases.D2H):
                     return np.asarray(jax.device_get(out))
 
-        fut = self._pool.submit(call)
+        # One daemon thread per guarded attempt (not a ThreadPoolExecutor):
+        # pool workers are non-daemon and joined at interpreter exit, so a
+        # step call that never returns — the exact failure the watchdog
+        # exists for — would block process shutdown forever after being
+        # "abandoned" here.  A hung daemon thread dies with the process.
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+
+        def runner():
+            try:
+                fut.set_result(call())
+            except BaseException as e:
+                fut.set_exception(e)
+
+        threading.Thread(target=runner, name="serve-step",
+                         daemon=True).start()
         try:
             counts = fut.result(timeout=self.config.watchdog_s)
         except concurrent.futures.TimeoutError:
-            # Abandon the stuck worker (it finishes or dies on its own) and
-            # give the next attempt a fresh one — never wait on a straggler.
-            self._pool.shutdown(wait=False)
-            self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+            # Abandon the stuck worker (it finishes or dies on its own);
+            # the next attempt gets a fresh one — never wait on a straggler.
             obs_trace.event("serve.watchdog_timeout",
                             budget_s=self.config.watchdog_s)
             raise WatchdogTimeout(
@@ -532,7 +574,6 @@ class SpatialServer:
             self._thread = None
         if drain:
             self.drain(timeout)
-        self._pool.shutdown(wait=False)
 
     # --------------------------------------------------------------- observe
 

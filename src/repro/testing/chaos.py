@@ -24,11 +24,34 @@ Fault kinds (the chaos suite drives each through the server):
                  RESOURCE_EXHAUSTED on ``device_put``)
 ==============  ===========================================================
 
+Replica-level kinds (router tier — see :class:`ReplicaChaos`, which wraps a
+``repro.serve.router.Replica`` instead of a server seam):
+
+=================  ========================================================
+``replica_crash``  ``submit`` raises :class:`ReplicaCrashError` (models a
+                   whole replica process dying; the router must fail over)
+``replica_hang``   ``submit`` returns a ticket that never completes (models
+                   a wedged replica; the router's attempt timeout / hedge
+                   must cover it)
+``poison``         the replica's step returns *in-bounds but wrong* counts —
+                   off-by-one, so it slips past the server's cheap bounds
+                   sanity check and only the sampled oracle cross-check can
+                   catch it (silent-corruption drill for the router)
+=================  ========================================================
+
 A plan is a list of :class:`Fault` entries, each naming a kind, the 0-based
-call index at which it fires, and how many consecutive calls it affects —
-no randomness, so every chaos test replays exactly.  ``install`` wraps a
-:class:`~repro.serve.spatial_serve.SpatialServer` in place; ``wrap_step`` /
-``wrap_place`` wrap bare callables for use at the ``stream_batches`` seam.
+call index at which it fires, and how many consecutive calls it affects.
+``period`` turns a fault into a repeating (flapping) schedule: from
+``at_call`` on, ``count`` calls out of every ``period`` fire.  Either way a
+plan is fully deterministic by call index, so every chaos test replays
+exactly.  :func:`random_plan` derives a plan from an explicit integer seed
+(``numpy.random.default_rng``) — randomized chaos sweeps stay replayable by
+logging the seed, and :meth:`ChaosInjector.describe` renders seed + plan +
+fired-fault log for failure output.
+
+``install`` wraps a :class:`~repro.serve.spatial_serve.SpatialServer` in
+place; ``wrap_step`` / ``wrap_place`` wrap bare callables for use at the
+``stream_batches`` seam.
 """
 from __future__ import annotations
 
@@ -44,10 +67,15 @@ NAN_COUNTS = "nan_counts"
 CORRUPT = "corrupt"
 OOM = "oom"
 
+REPLICA_CRASH = "replica_crash"
+REPLICA_HANG = "replica_hang"
+POISON = "poison"
+
 _STEP_KINDS = (DEVICE_LOSS, STRAGGLER, NAN_COUNTS, CORRUPT)
 _PLACE_KINDS = (OOM,)
+_REPLICA_KINDS = (REPLICA_CRASH, REPLICA_HANG, POISON)
 
-KINDS = _STEP_KINDS + _PLACE_KINDS
+KINDS = _STEP_KINDS + _PLACE_KINDS + _REPLICA_KINDS
 
 
 class DeviceLostError(RuntimeError):
@@ -58,15 +86,25 @@ class PlacementOOMError(RuntimeError):
     """Injected stand-in for RESOURCE_EXHAUSTED during ``device_put``."""
 
 
+class ReplicaCrashError(RuntimeError):
+    """Injected stand-in for a whole replica dying mid-request."""
+
+
 @dataclasses.dataclass(frozen=True)
 class Fault:
-    """One scheduled fault: ``kind`` fires on calls
-    ``[at_call, at_call + count)`` of its seam."""
+    """One scheduled fault.
+
+    With ``period == 0`` (default), ``kind`` fires on calls
+    ``[at_call, at_call + count)`` of its seam — a one-shot window.  With
+    ``period >= count``, the window repeats: from ``at_call`` on, the first
+    ``count`` calls of every ``period``-call cycle fire (a *flapping*
+    schedule, e.g. ``period=4, count=2`` = down half the time)."""
 
     kind: str
     at_call: int
     count: int = 1
     delay_s: float = 0.0      # straggler sleep
+    period: int = 0           # 0 = one-shot; >= count = repeat every period
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -74,9 +112,44 @@ class Fault:
                              f"expected one of {KINDS}")
         if self.at_call < 0 or self.count < 1:
             raise ValueError("at_call must be >= 0 and count >= 1")
+        if self.period and self.period < self.count:
+            raise ValueError("period must be 0 (one-shot) or >= count")
 
     def active(self, call_idx: int) -> bool:
-        return self.at_call <= call_idx < self.at_call + self.count
+        if call_idx < self.at_call:
+            return False
+        if self.period:
+            return (call_idx - self.at_call) % self.period < self.count
+        return call_idx < self.at_call + self.count
+
+
+def random_plan(
+    seed: int,
+    *,
+    n_faults: int = 3,
+    kinds: Sequence[str] = _STEP_KINDS + _PLACE_KINDS,
+    max_call: int = 16,
+    max_count: int = 2,
+    max_delay_s: float = 0.2,
+) -> list[Fault]:
+    """Derive a deterministic fault plan from an explicit integer seed.
+
+    Same seed → identical plan, always — the seed is the only state, so a
+    failing randomized chaos test replays from the number in its report
+    (``ChaosInjector(random_plan(seed), seed=seed)``)."""
+    rng = np.random.default_rng(seed)
+    kinds = tuple(kinds)
+    plan = []
+    for _ in range(n_faults):
+        kind = kinds[int(rng.integers(len(kinds)))]
+        plan.append(Fault(
+            kind=kind,
+            at_call=int(rng.integers(max_call)),
+            count=int(rng.integers(1, max_count + 1)),
+            delay_s=(float(rng.uniform(0.01, max_delay_s))
+                     if kind in (STRAGGLER, REPLICA_HANG) else 0.0),
+        ))
+    return plan
 
 
 class ChaosInjector:
@@ -84,15 +157,32 @@ class ChaosInjector:
 
     ``step_calls`` / ``place_calls`` count invocations since installation;
     ``log`` records every injected fault as ``(seam_call_idx, kind)`` so
-    tests can assert exactly what fired."""
+    tests can assert exactly what fired.  ``seed`` is carried for
+    replayability reporting only (:meth:`describe`) — pass the seed that
+    produced the plan via :func:`random_plan`, or None for hand-written
+    plans."""
 
     def __init__(self, faults: Sequence[Fault],
-                 *, sleep: Callable[[float], None] = time.sleep):
+                 *, seed: int | None = None,
+                 sleep: Callable[[float], None] = time.sleep):
         self.faults = list(faults)
+        self.seed = seed
         self._sleep = sleep
         self.step_calls = 0
         self.place_calls = 0
         self.log: list[tuple[int, str]] = []
+
+    def describe(self) -> str:
+        """Replayability string for failure output: seed, plan, fired log."""
+        plan = ", ".join(
+            f"{f.kind}@{f.at_call}x{f.count}"
+            + (f"/{f.period}" if f.period else "")
+            + (f"+{f.delay_s:g}s" if f.delay_s else "")
+            for f in self.faults) or "(empty)"
+        return (f"chaos(seed={self.seed}, plan=[{plan}], "
+                f"fired={self.log})")
+
+    __repr__ = describe
 
     def _match(self, idx: int, kinds: tuple[str, ...]) -> Fault | None:
         for f in self.faults:
@@ -147,4 +237,101 @@ class ChaosInjector:
         """Wrap a ``SpatialServer``'s fast-path seams in place."""
         server._step = self.wrap_step(server._step)
         server._place = self.wrap_place(server._place)
+        return self
+
+
+class _HungTicket:
+    """Stand-in for a request a wedged replica accepted but will never
+    answer: ``wait`` blocks until its timeout and reports False, ``done``
+    stays False forever."""
+
+    status = "pending"
+    reason = "replica_hang"
+    count = None
+    path = None
+
+    def __init__(self, rect):
+        self.rect = rect
+
+    @property
+    def done(self) -> bool:
+        return False
+
+    def wait(self, timeout: float | None = None) -> bool:
+        if timeout:
+            time.sleep(timeout)
+        return False
+
+
+class ReplicaChaos:
+    """Deterministic replica-level fault injection for the router tier.
+
+    Wraps one ``repro.serve.router.Replica`` in place: ``submit`` is the
+    seam for ``replica_crash`` (raises) and ``replica_hang`` (returns a
+    never-completing ticket); the replica's *server step* is the seam for
+    ``poison`` (in-bounds wrong counts — ``count > 0`` answers come back
+    off-by-one, which passes the server's bounds sanity check and is only
+    caught by a sampled oracle cross-check).  Call indices count ``submit``
+    invocations for crash/hang and step invocations for poison, so the two
+    schedules compose independently."""
+
+    def __init__(self, faults: Sequence[Fault],
+                 *, seed: int | None = None):
+        self.faults = list(faults)
+        self.seed = seed
+        self.submit_calls = 0
+        self.step_calls = 0
+        self.log: list[tuple[int, str]] = []
+
+    def describe(self) -> str:
+        plan = ", ".join(
+            f"{f.kind}@{f.at_call}x{f.count}"
+            + (f"/{f.period}" if f.period else "")
+            for f in self.faults) or "(empty)"
+        return (f"replica_chaos(seed={self.seed}, plan=[{plan}], "
+                f"fired={self.log})")
+
+    __repr__ = describe
+
+    def _match(self, idx: int, kinds: tuple[str, ...]) -> Fault | None:
+        for f in self.faults:
+            if f.kind in kinds and f.active(idx):
+                return f
+        return None
+
+    def install(self, replica) -> "ReplicaChaos":
+        """Wrap a router ``Replica``'s submit + server-step seams in place."""
+        inner_submit = replica.submit
+
+        def chaos_submit(rect, **kwargs):
+            idx = self.submit_calls
+            self.submit_calls += 1
+            fault = self._match(idx, (REPLICA_CRASH, REPLICA_HANG))
+            if fault is None:
+                return inner_submit(rect, **kwargs)
+            self.log.append((idx, fault.kind))
+            if fault.kind == REPLICA_CRASH:
+                raise ReplicaCrashError(
+                    f"injected replica crash at submit call {idx} "
+                    f"on {replica.name!r}")
+            return _HungTicket(rect)
+
+        replica.submit = chaos_submit
+
+        inner_step = replica.server._step
+
+        def chaos_step(*args, **kwargs):
+            idx = self.step_calls
+            self.step_calls += 1
+            out = inner_step(*args, **kwargs)
+            fault = self._match(idx, (POISON,))
+            if fault is None:
+                return out
+            self.log.append((idx, fault.kind))
+            out = np.asarray(out)
+            # In-bounds off-by-one: wrong, but passes the [0, num_rects]
+            # bounds sanity check — only an oracle cross-check catches it.
+            return np.where(out > 0, out - 1, out + 1).astype(out.dtype)
+
+        replica.server._step = chaos_step
         return self

@@ -21,6 +21,9 @@ def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running subprocess tests")
     config.addinivalue_line(
         "markers", "chaos: fault-injection serving tests (dedicated CI job)")
+    config.addinivalue_line(
+        "markers", "chaos_router: replica-level fault-injection router tests "
+        "(dedicated CI job)")
 
 
 try:  # pragma: no cover - exercised only when hypothesis is installed

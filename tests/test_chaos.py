@@ -172,6 +172,62 @@ def test_fault_plan_validation():
         chaos.Fault(chaos.OOM, at_call=-1)
     with pytest.raises(ValueError):
         chaos.Fault(chaos.OOM, at_call=0, count=0)
+    with pytest.raises(ValueError):
+        chaos.Fault(chaos.OOM, at_call=0, count=3, period=2)  # period < count
+
+
+def test_flapping_fault_schedule():
+    """period turns a fault into a repeating window: count calls out of
+    every period fire, deterministically by call index."""
+    f = chaos.Fault(chaos.DEVICE_LOSS, at_call=2, count=1, period=3)
+    fired = [i for i in range(11) if f.active(i)]
+    assert fired == [2, 5, 8]
+    assert not f.active(0) and not f.active(1)
+    one_shot = chaos.Fault(chaos.DEVICE_LOSS, at_call=2, count=2)
+    assert [i for i in range(8) if one_shot.active(i)] == [2, 3]
+
+
+def test_random_plan_replays_from_seed():
+    """Satellite: the seed is the whole state — same seed, same plan,
+    always; different seeds differ; every plan validates."""
+    a = chaos.random_plan(1234, n_faults=5)
+    b = chaos.random_plan(1234, n_faults=5)
+    assert a == b
+    assert chaos.random_plan(1235, n_faults=5) != a
+    for f in a:
+        assert f.kind in chaos.KINDS and f.at_call >= 0 and f.count >= 1
+
+
+def test_describe_carries_seed_and_fired_log(workload):
+    """Failure output names the seed, the plan, and what actually fired —
+    a chaos failure is replayable straight from the pytest report."""
+    _, queries, tree, want = workload
+    seed = 4242
+    inj = chaos.ChaosInjector(
+        [chaos.Fault(chaos.DEVICE_LOSS, at_call=0, count=1)], seed=seed)
+    srv = _server(tree)
+    inj.install(srv)
+    got, _ = _serve_all(srv, queries[:64])
+    np.testing.assert_array_equal(got, want[:64], err_msg=inj.describe())
+    desc = inj.describe()
+    assert f"seed={seed}" in desc
+    assert "device_loss@0x1" in desc
+    assert "(0, 'device_loss')" in desc
+    assert repr(inj) == desc
+
+
+def test_seeded_plan_through_server_is_exact(workload):
+    """A seed-derived plan drives the server exactly like a hand-written
+    one; assertions carry describe() so failures replay from the seed."""
+    _, queries, tree, want = workload
+    seed = 99
+    plan = chaos.random_plan(seed, n_faults=3, max_call=4, max_delay_s=0.05)
+    inj = chaos.ChaosInjector(plan, seed=seed)
+    srv = _server(tree, max_retries=3)
+    inj.install(srv)
+    got, tickets = _serve_all(srv, queries)
+    np.testing.assert_array_equal(got, want, err_msg=inj.describe())
+    assert all(t.done for t in tickets), inj.describe()
 
 
 def test_chaos_wrappers_compose_at_bare_seams(workload):

@@ -1,0 +1,192 @@
+"""Chaos-router suite: the ISSUE's acceptance scenario.
+
+A rolling layout swap under concurrent replica crash + straggler injection
+must complete with zero dropped and zero duplicated responses, every
+released count bit-equal to the single-replica reference for the layout
+that served it.  Marked ``chaos_router`` and run in the dedicated CI job
+(``timeout-minutes`` is the outer hang guard — the suite's own contract is
+that no replica-level fault may hang the router).
+
+Fault schedules are seed-derived (:func:`repro.testing.chaos.random_plan`)
+or hand-written; either way every assertion carries
+``ChaosInjector.describe()`` / ``ReplicaChaos.describe()`` so a failure
+report names the seed and the exact plan to replay.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import engine as beng
+from repro.core import rtree
+from repro.data import datasets, spider
+from repro.kernels import ref
+from repro.serve import router as router_mod
+from repro.serve.router import RouterConfig, SpatialRouter, RETIRED
+from repro.serve.spatial_serve import STATUS_OK, ServeConfig
+from repro.testing import chaos
+
+pytestmark = pytest.mark.chaos_router
+
+SEED = 0xA11CE
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rects = spider.uniform(2500, seed=81, max_size=0.02)
+    queries = datasets.make_queries(rects, 0.2, seed=82)   # 500 queries
+    tree = rtree.build_str_3level(rects, leaf_capacity=32, fanout=8)
+    rects2 = spider.uniform(2500, seed=83, max_size=0.02)
+    tree2 = rtree.build_str_3level(rects2, leaf_capacity=32, fanout=8)
+    return rects, queries, tree, rects2, tree2
+
+
+def _factory(tree):
+    def make():
+        return beng.BroadcastEngine(tree, _mesh(), batch_size=64)
+    return make
+
+
+def _mesh():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+def test_rolling_swap_under_crash_and_straggler(workload):
+    """Acceptance: 3 replicas serve live traffic while (a) one replica
+    crashes on every submit, (b) another replica's device step straggles on
+    a flapping schedule, and (c) the pool rolls to a new layout build — all
+    at once.  Zero dropped responses, zero duplicated responses, zero
+    failures, every count bit-equal to the reference of the layout that
+    served it."""
+    rects, queries, tree, rects2, tree2 = workload
+    router = SpatialRouter(
+        _factory(tree),
+        config=RouterConfig(num_replicas=3, attempt_timeout_s=30.0,
+                            failover_attempts=3),
+        serve_config=ServeConfig(batch_size=64, watchdog_s=5.0,
+                                 crosscheck_every=0))
+    v1 = router.layout_version
+    crash = chaos.ReplicaChaos(
+        [chaos.Fault(chaos.REPLICA_CRASH, at_call=0, count=1, period=1)],
+        seed=SEED).install(router.replicas()[0])
+    straggle = chaos.ChaosInjector(
+        [chaos.Fault(chaos.STRAGGLER, at_call=0, count=1, period=3,
+                     delay_s=0.2)], seed=SEED)
+    straggle.install(router.replicas()[1].server)
+    err = lambda: f"{crash.describe()} + {straggle.describe()}"
+
+    completions = []
+    orig_complete = router_mod.RouterTicket._complete
+
+    def counting_complete(self, **fields):
+        won = orig_complete(self, **fields)
+        if won:
+            completions.append(self)
+        return won
+
+    tickets = []
+    try:
+        router_mod.RouterTicket._complete = counting_complete
+        stop = threading.Event()
+
+        def traffic():
+            i = 0
+            while not stop.is_set() and i < 300:
+                tickets.append(
+                    router.submit(queries[i % len(queries)],
+                                  deadline_s=60.0))
+                i += 1
+                stop.wait(0.005)
+
+        t = threading.Thread(target=traffic)
+        t.start()
+        try:
+            router.swap_layout(_factory(tree2))   # rolls all three replicas
+        finally:
+            stop.set()
+            t.join(60.0)
+        assert all(tk.wait(120.0) for tk in tickets), err()
+    finally:
+        router_mod.RouterTicket._complete = orig_complete
+        router.stop()
+
+    assert tickets, "traffic thread never submitted"
+    # zero dropped, zero failed
+    bad = [(tk.status, tk.reason) for tk in tickets
+           if tk.status != STATUS_OK]
+    assert not bad, f"{bad[:5]} under {err()}"
+    # zero duplicated: each ticket completed exactly once
+    assert len(completions) == len(tickets), err()
+    assert set(id(t) for t in completions) == set(id(t) for t in tickets)
+    # bit-equal to the single-replica reference of the serving layout
+    v2 = router.layout_version
+    assert v2 != v1 and {tk.layout_version for tk in tickets} <= {v1, v2}
+    rect_mat = np.stack([tk.rect for tk in tickets])
+    w1 = ref.overlap_counts_np(rect_mat, rects)
+    w2 = ref.overlap_counts_np(rect_mat, rects2)
+    for i, tk in enumerate(tickets):
+        want = int(w1[i] if tk.layout_version == v1 else w2[i])
+        assert tk.count == want, (
+            f"ticket {i} on {tk.layout_version}: {tk.count} != {want} "
+            f"under {err()}")
+    # the swap finished cleanly despite the chaos
+    assert all(r.state == RETIRED for r in router._retired), err()
+    assert all(r.layout_version == v2 for r in router.replicas()), err()
+    m = router.metrics()
+    assert m["responses_failed"] == 0, err()
+    assert m["layout_swaps"] == 1
+
+
+def test_seeded_plan_sweep_serves_exactly(workload):
+    """Randomized-but-replayable: a seed-derived fault plan over both server
+    seams never breaks exactness; the failure message carries the seed."""
+    rects, queries, tree, _, _ = workload
+    for seed in (7, 23):
+        plan = chaos.random_plan(seed, n_faults=4, max_call=6,
+                                 max_delay_s=0.05)
+        router = SpatialRouter(
+            _factory(tree),
+            config=RouterConfig(num_replicas=2, attempt_timeout_s=30.0),
+            serve_config=ServeConfig(batch_size=64, watchdog_s=5.0,
+                                     max_retries=2, backoff_base_s=0.001,
+                                     crosscheck_every=0))
+        inj = chaos.ChaosInjector(plan, seed=seed)
+        inj.install(router.replicas()[0].server)
+        try:
+            tickets = [router.submit(q, deadline_s=60.0)
+                       for q in queries[:120]]
+            assert all(t.wait(120.0) for t in tickets), inj.describe()
+            assert all(t.status == STATUS_OK for t in tickets), inj.describe()
+            got = np.array([t.count for t in tickets], dtype=np.int32)
+            np.testing.assert_array_equal(
+                got, ref.overlap_counts_np(queries[:120], rects),
+                err_msg=inj.describe())
+        finally:
+            router.stop()
+
+
+def test_hang_replica_covered_by_attempt_timeout(workload):
+    """A wedged replica (accepts work, never answers) is covered by the
+    per-attempt timeout: the router reroutes and every request completes."""
+    rects, queries, tree, _, _ = workload
+    router = SpatialRouter(
+        _factory(tree),
+        config=RouterConfig(num_replicas=2, attempt_timeout_s=0.3,
+                            failover_attempts=3),
+        serve_config=ServeConfig(batch_size=64, watchdog_s=5.0,
+                                 crosscheck_every=0))
+    rc = chaos.ReplicaChaos(
+        [chaos.Fault(chaos.REPLICA_HANG, at_call=0, count=1, period=1)],
+        seed=SEED).install(router.replicas()[0])
+    try:
+        tickets = [router.submit(q, deadline_s=30.0) for q in queries[:40]]
+        assert all(t.wait(60.0) for t in tickets), rc.describe()
+        assert all(t.status == STATUS_OK for t in tickets), rc.describe()
+        got = np.array([t.count for t in tickets], dtype=np.int32)
+        np.testing.assert_array_equal(
+            got, ref.overlap_counts_np(queries[:40], rects),
+            err_msg=rc.describe())
+        assert router.metrics()["failovers"] > 0
+    finally:
+        router.stop()

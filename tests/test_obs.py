@@ -319,6 +319,40 @@ def test_snapshot_is_json_serializable():
     assert snap["h"]["p50"] is not None
 
 
+def test_aggregate_prometheus_tags_sources():
+    """aggregate_prometheus merges registries into one surface: each named
+    source's series gains the replica label (sorted into the label set),
+    histograms included, base series stay unlabeled."""
+    r0, r1, base = metrics.Registry(), metrics.Registry(), metrics.Registry()
+    r0.counter("events_total", "events").inc(3, kind="served")
+    r1.counter("events_total").inc(1, kind="served")
+    r1.gauge("healthy").set(1)
+    h = r0.histogram("lat_seconds", buckets=(0.1, 1.0))
+    h.observe(0.5)
+    base.counter("router_requests_total", "router admits").inc(4)
+    text = metrics.aggregate_prometheus(
+        {"r0": r0, "r1": r1}, label="replica", base=base)
+    assert 'events_total{kind="served",replica="r0"} 3\n' in text
+    assert 'events_total{kind="served",replica="r1"} 1\n' in text
+    assert 'healthy{replica="r1"} 1\n' in text
+    assert 'lat_seconds_bucket{le="1",replica="r0"} 1\n' in text
+    assert 'lat_seconds_sum{replica="r0"} 0.5\n' in text
+    assert 'lat_seconds_count{replica="r0"} 1\n' in text
+    assert "router_requests_total 4\n" in text          # base: unlabeled
+    # exposition format: one HELP/TYPE block per metric name, help wins
+    # from the first source that has one
+    assert text.count("# TYPE events_total counter") == 1
+    assert "# HELP events_total events" in text
+
+
+def test_aggregate_prometheus_rejects_kind_conflicts():
+    a, b = metrics.Registry(), metrics.Registry()
+    a.counter("x")
+    b.gauge("x")
+    with pytest.raises(TypeError):
+        metrics.aggregate_prometheus({"a": a, "b": b})
+
+
 # ---------------------------------------------------------------------------
 # engine integration (small real run through the instrumented stack)
 # ---------------------------------------------------------------------------

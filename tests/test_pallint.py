@@ -25,8 +25,8 @@ def _rules(src, path=SRC_PATH):
 def test_registry_has_full_catalog():
     ids = set(registry())
     assert {"PL101", "PL102", "PL103", "PL104", "PL105", "PL106", "PL107",
-            "PL108", "PL109", "PL110", "PL111", "PC201", "PC202", "PC203",
-            "PC204"} <= ids
+            "PL108", "PL109", "PL110", "PL111", "PL112", "PC201", "PC202",
+            "PC203", "PC204"} <= ids
 
 
 # --- PL1xx doctrine rules --------------------------------------------------
@@ -243,6 +243,75 @@ def test_pl111_suppression():
           "def stamp():\n"
           "    return time.time()    # pallint: disable=PL111\n")
     assert "PL111" not in _rules(ok, path=SERVE_PATH)
+
+
+_SILENT_FAILOVER = (
+    "def serve(task, primary, backup):\n"
+    "    try:\n"
+    "        return primary.submit(task)\n"
+    "    except RuntimeError:\n"
+    "        return backup.submit(task)\n"
+)
+
+
+def test_pl112_silent_failover():
+    assert "PL112" in _rules(_SILENT_FAILOVER, path=SERVE_PATH)
+    # a reroute() call without recording is the same violation
+    reroute = ("def serve(task, pool):\n"
+               "    try:\n"
+               "        return pool.primary(task)\n"
+               "    except RuntimeError:\n"
+               "        return pool.reroute(task)\n")
+    assert "PL112" in _rules(reroute, path=SERVE_PATH)
+
+
+def test_pl112_recorded_failover_ok():
+    # counter increment inside the handler: observable, quiet
+    inc = ("def serve(task, primary, backup, failovers):\n"
+           "    try:\n"
+           "        return primary.submit(task)\n"
+           "    except RuntimeError:\n"
+           "        failovers.inc(replica=backup.name)\n"
+           "        return backup.submit(task)\n")
+    assert "PL112" not in _rules(inc, path=SERVE_PATH)
+    # trace event: quiet
+    event = ("from repro.obs import trace\n"
+             "def serve(task, primary, backup):\n"
+             "    try:\n"
+             "        return primary.submit(task)\n"
+             "    except RuntimeError:\n"
+             "        trace.event('router.failover')\n"
+             "        return backup.submit(task)\n")
+    assert "PL112" not in _rules(event, path=SERVE_PATH)
+    # a _record_* helper (the router's idiom): quiet
+    helper = ("def serve(self, task, primary, backup):\n"
+              "    try:\n"
+              "        return primary.submit(task)\n"
+              "    except RuntimeError as e:\n"
+              "        self._record_failover(backup, e)\n"
+              "        return backup.submit(task)\n")
+    assert "PL112" not in _rules(helper, path=SERVE_PATH)
+    # an except handler with no reroute at all: not failover, quiet
+    plain = ("def serve(task, primary):\n"
+             "    try:\n"
+             "        return primary.submit(task)\n"
+             "    except RuntimeError:\n"
+             "        return None\n")
+    assert "PL112" not in _rules(plain, path=SERVE_PATH)
+
+
+def test_pl112_scoped_to_serve_tree():
+    assert "PL112" not in _rules(_SILENT_FAILOVER, path=SRC_PATH)
+    assert "PL112" not in _rules(_SILENT_FAILOVER, path=TEST_PATH)
+
+
+def test_pl112_suppression():
+    ok = ("def serve(task, primary, backup):\n"
+          "    try:\n"
+          "        return primary.submit(task)\n"
+          "    except RuntimeError:    # pallint: disable=PL112\n"
+          "        return backup.submit(task)\n")
+    assert "PL112" not in _rules(ok, path=SERVE_PATH)
 
 
 def test_file_level_suppression():

@@ -1,0 +1,432 @@
+"""Multi-replica router: no-fault contract + the ISSUE's router invariants.
+
+Covers the no-fault/deterministic side: bit-equality with the single-replica
+engine, strict admission, health probes, routing metrics aggregation, hedging
+under a straggler, poisoned-replica ejection, and the rolling layout swap's
+version fence (machine-checked: every submit lands on an ACTIVE replica, and
+no server executes batches from more than one layout version).
+
+The concurrent crash+straggler+swap scenario lives in
+``tests/test_chaos_router.py`` (marker ``chaos_router``, dedicated CI job).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import engine as beng
+from repro.core import rtree
+from repro.core.engine import QueryValidationError
+from repro.data import datasets, spider
+from repro.kernels import ref
+from repro.serve import router as router_mod
+from repro.serve import spatial_serve
+from repro.serve.router import (
+    ACTIVE, DRAINING, EJECTED, RETIRED, STATUS_FAILED,
+    Replica, ReplicaUnavailableError, RouterConfig, SpatialRouter)
+from repro.serve.spatial_serve import STATUS_OK, ServeConfig
+from repro.testing import chaos
+
+
+def _mesh1():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rects = spider.uniform(2500, seed=71, max_size=0.02)
+    queries = datasets.make_queries(rects, 0.2, seed=72)   # 500 queries
+    tree = rtree.build_str_3level(rects, leaf_capacity=32, fanout=8)
+    rects2 = spider.uniform(2500, seed=73, max_size=0.02)
+    tree2 = rtree.build_str_3level(rects2, leaf_capacity=32, fanout=8)
+    return rects, queries, tree, rects2, tree2
+
+
+def _factory(tree):
+    def make():
+        return beng.BroadcastEngine(tree, _mesh1(), batch_size=64)
+    return make
+
+
+def _router(tree, *, serve=None, **cfg):
+    serve_cfg = dict(batch_size=64, watchdog_s=30.0, crosscheck_every=0)
+    serve_cfg.update(serve or {})
+    defaults = dict(num_replicas=2, attempt_timeout_s=30.0)
+    defaults.update(cfg)
+    return SpatialRouter(_factory(tree),
+                         config=RouterConfig(**defaults),
+                         serve_config=ServeConfig(**serve_cfg))
+
+
+def _route_all(router, queries, deadline_s=60.0, wait_s=120.0):
+    tickets = [router.submit(q, deadline_s=deadline_s) for q in queries]
+    assert all(t.wait(wait_s) for t in tickets), "router dropped a request"
+    return tickets
+
+
+# ---------------------------------------------------------------- invariants
+
+
+def test_bit_equal_to_single_replica_engine(workload):
+    """ISSUE invariant 1: under no faults, routed counts are bit-equal to
+    one ``BroadcastEngine.query`` call — across both replicas."""
+    _, queries, tree, _, _ = workload
+    router = _router(tree)
+    try:
+        want = np.asarray(_factory(tree)().query(queries))
+        tickets = _route_all(router, queries)
+        assert all(t.status == STATUS_OK for t in tickets)
+        got = np.array([t.count for t in tickets], dtype=np.int32)
+        np.testing.assert_array_equal(got, want)
+        used = {t.replica for t in tickets}
+        assert used == {"r0", "r1"}        # both replicas actually served
+        assert all(t.layout_version == router.layout_version
+                   for t in tickets)
+    finally:
+        router.stop()
+
+
+def test_exactly_once_under_crash_failover(workload):
+    """ISSUE invariant 3: a persistently crashing replica costs failovers,
+    never responses — every ticket completes exactly once, no dupes, no
+    drops, all exact."""
+    rects, queries, tree, _, _ = workload
+    router = _router(tree)
+    rc = chaos.ReplicaChaos(
+        [chaos.Fault(chaos.REPLICA_CRASH, at_call=0, count=1, period=1)],
+        seed=101).install(router.replicas()[0])
+    completions = []
+    orig_complete = router_mod.RouterTicket._complete
+
+    def counting_complete(self, **fields):
+        won = orig_complete(self, **fields)
+        if won:
+            completions.append(self)
+        return won
+
+    try:
+        router_mod.RouterTicket._complete = counting_complete
+        tickets = _route_all(router, queries[:100])
+    finally:
+        router_mod.RouterTicket._complete = orig_complete
+        router.stop()
+    err = rc.describe()
+    assert all(t.status == STATUS_OK for t in tickets), err
+    got = np.array([t.count for t in tickets], dtype=np.int32)
+    np.testing.assert_array_equal(
+        got, ref.overlap_counts_np(queries[:100], rects), err_msg=err)
+    # exactly-once: each ticket completed once, nothing extra, nothing lost
+    assert len(completions) == len(tickets), err
+    assert set(id(t) for t in completions) == set(id(t) for t in tickets)
+    m = router.metrics()
+    assert m["failovers"] > 0 and m["responses_failed"] == 0
+    assert all(t.replica == "r1" for t in tickets)
+
+
+def test_rolling_swap_version_fence(workload):
+    """ISSUE invariant 2: during a rolling layout swap, every submit lands
+    on an ACTIVE replica and no server ever executes batches from more than
+    one layout version — machine-checked at both seams."""
+    rects, queries, tree, rects2, tree2 = workload
+    submits = []
+    orig_submit = Replica.submit
+
+    def logging_submit(self, rect, **kw):
+        submits.append((self.name, self.state, self.layout_version))
+        # tag the server with its owner's (immutable) version: any server
+        # that ever logs two distinct tags executed two layouts
+        self.server._version_tag = self.layout_version
+        return orig_submit(self, rect, **kw)
+
+    executes = {}
+    orig_execute = spatial_serve.SpatialServer._execute
+
+    def logging_execute(self, padded, k):
+        executes.setdefault(id(self), set()).add(
+            getattr(self, "_version_tag", None))
+        return orig_execute(self, padded, k)
+
+    router = _router(tree)
+    v1 = router.layout_version
+    try:
+        Replica.submit = logging_submit
+        spatial_serve.SpatialServer._execute = logging_execute
+
+        stop = threading.Event()
+        tickets = []
+
+        def traffic():
+            i = 0
+            while not stop.is_set() and i < 3000:
+                tickets.append(
+                    router.submit(queries[i % len(queries)], deadline_s=60.0))
+                i += 1
+                stop.wait(0.005)
+
+        t = threading.Thread(target=traffic)
+        t.start()
+        try:
+            router.swap_layout(_factory(tree2))
+        finally:
+            stop.set()
+            t.join(30.0)
+        assert all(t.wait(120.0) for t in tickets)
+    finally:
+        Replica.submit = orig_submit
+        spatial_serve.SpatialServer._execute = orig_execute
+        router.stop()
+
+    v2 = router.layout_version
+    assert v2 != v1 and router.metrics()["layout_swaps"] == 1
+    # fence check 1: every submit hit an ACTIVE replica (no draining/retired
+    # replica ever accepted work)
+    assert submits and all(state == ACTIVE for _, state, _ in submits)
+    # fence check 2: each server executed exactly one layout version —
+    # no batch can have mixed versions if no *server* ever saw two
+    assert executes and all(len(vs) == 1 for vs in executes.values())
+    # zero dropped in-flight: everything admitted before/during the swap
+    # completed (ok on whichever version served it; failed never)
+    assert all(t.status == STATUS_OK for t in tickets)
+    by_version = {t.layout_version for t in tickets}
+    assert by_version <= {v1, v2}
+    # every answer is exact for the layout that served it
+    w1 = ref.overlap_counts_np(
+        np.stack([t.rect for t in tickets]), rects)
+    w2 = ref.overlap_counts_np(
+        np.stack([t.rect for t in tickets]), rects2)
+    for i, tk in enumerate(tickets):
+        want = w1[i] if tk.layout_version == v1 else w2[i]
+        assert tk.count == want, (i, tk.layout_version, tk.count, want)
+    # old replicas drained + retired, new pool serves v2 only
+    assert all(r.state == RETIRED for r in router._retired)
+    assert all(r.layout_version == v2 for r in router.replicas())
+
+
+# ------------------------------------------------------------------- hedging
+
+
+def test_hedging_cuts_straggler_tail(workload):
+    """A persistent straggler on one replica: hedged p99 must beat unhedged
+    p99 by a wide margin (the tail-at-scale contract), with every response
+    still exact and the losing duplicate cancelled when possible."""
+    rects, queries, tree, _, _ = workload
+
+    def run(hedge):
+        router = _router(
+            tree, hedge=hedge, hedge_delay_s=0.02,
+            serve=dict(watchdog_s=5.0))
+        inj = chaos.ChaosInjector(
+            [chaos.Fault(chaos.STRAGGLER, at_call=0, count=1, period=1,
+                         delay_s=0.3)], seed=103)
+        inj.install(router.replicas()[0].server)
+        try:
+            tickets = _route_all(router, queries[:60], deadline_s=30.0)
+            assert all(t.status == STATUS_OK for t in tickets), inj.describe()
+            got = np.array([t.count for t in tickets], dtype=np.int32)
+            np.testing.assert_array_equal(
+                got, ref.overlap_counts_np(queries[:60], rects),
+                err_msg=inj.describe())
+            lat = sorted(t.latency_s for t in tickets)
+            return lat[int(len(lat) * 0.99)], router.metrics()
+        finally:
+            router.stop()
+
+    p99_plain, _ = run(hedge=False)
+    p99_hedged, m = run(hedge=True)
+    assert m["hedges"] > 0 and m["hedge_wins"] > 0
+    assert p99_hedged < p99_plain, (p99_hedged, p99_plain)
+    assert p99_hedged < 0.8 * p99_plain, (p99_hedged, p99_plain)
+
+
+def test_hedge_pairs_same_layout_version(workload):
+    """Hedges only pair replicas of the same layout version (the fence
+    extends to duplicates): with no same-version partner, no hedge fires."""
+    _, queries, tree, _, _ = workload
+    router = _router(tree, hedge=True, hedge_delay_s=0.0)
+    try:
+        # make r1 a different version by hand: no valid hedge partner for r0
+        router.replicas()[1].layout_version = "other-version"
+        picked = router._pick(
+            {"r0"}, version=router.replicas()[0].layout_version)
+        assert picked is None
+        tickets = _route_all(router, queries[:40], deadline_s=30.0)
+        assert all(t.status == STATUS_OK for t in tickets)
+        assert router.metrics()["hedges"] == 0    # fence blocked every hedge
+    finally:
+        router.stop()
+
+
+# ----------------------------------------------------------- poisoned replica
+
+
+def test_poisoned_replica_ejected(workload):
+    """A replica returning in-bounds wrong answers (slips past the server's
+    bounds sanity check) is caught by the router's sampled oracle
+    cross-check, ejected, and its in-flight work fails over — every released
+    response is exact."""
+    rects, queries, tree, _, _ = workload
+    router = _router(tree, crosscheck_every=1)
+    rc = chaos.ReplicaChaos(
+        [chaos.Fault(chaos.POISON, at_call=0, count=1, period=1)],
+        seed=105).install(router.replicas()[0])
+    try:
+        tickets = _route_all(router, queries[:80], deadline_s=60.0)
+        err = rc.describe()
+        assert all(t.status == STATUS_OK for t in tickets), err
+        got = np.array([t.count for t in tickets], dtype=np.int32)
+        np.testing.assert_array_equal(
+            got, ref.overlap_counts_np(queries[:80], rects), err_msg=err)
+        m = router.metrics()
+        assert m["ejections"] == 1, err
+        assert router.replicas()[0].state == EJECTED
+        assert all(t.replica == "r1" for t in tickets if t.attempts > 1)
+    finally:
+        router.stop()
+
+
+# ------------------------------------------------------------ health routing
+
+
+def test_probe_health_flap_and_recovery(workload):
+    """Flapping probes move the EWMA health score down through min_health
+    and back up once the fault clears; routing prefers the healthy replica
+    while its peer is sick."""
+    _, queries, tree, _, _ = workload
+    router = _router(tree, min_health=0.5, health_alpha=0.5)
+    r0 = router.replicas()[0]
+    # crash every submit on r0 → probes fail while the fault is active
+    rc = chaos.ReplicaChaos(
+        [chaos.Fault(chaos.REPLICA_CRASH, at_call=0, count=4, period=0)],
+        seed=107).install(r0)
+    try:
+        assert router.metrics()["replicas_healthy"] == 2
+        first = router.probe()
+        second = router.probe()
+        assert first["r0"] is False and second["r0"] is False
+        assert first["r1"] is True and second["r1"] is True
+        assert r0.health_score < 0.5
+        assert router.metrics()["replicas_healthy"] == 1
+        # unhealthy replica is avoided while a healthy one exists
+        assert router._pick(set()).name == "r1"
+        # fault window over (4 submits consumed) → probes pass, score recovers
+        for _ in range(4):
+            router.probe()
+        assert r0.health_score >= 0.5
+        assert router.metrics()["replicas_healthy"] == 2
+    finally:
+        router.stop()
+    text = router.prometheus_text()
+    assert 'router_probe_failures_total{replica="r0"} 4' in text
+
+
+def test_all_replicas_sick_still_routes(workload):
+    """Health is a preference, not a gate: with every score below
+    min_health the router still serves (degraded beats unavailable)."""
+    _, queries, tree, _, _ = workload
+    router = _router(tree)
+    try:
+        for r in router.replicas():
+            r.health_score = 0.0
+        tickets = _route_all(router, queries[:30])
+        assert all(t.status == STATUS_OK for t in tickets)
+        assert router.metrics()["replicas_healthy"] == 0
+    finally:
+        router.stop()
+
+
+# ------------------------------------------------------- lifecycle and admin
+
+
+def test_replica_state_fence_rejects_submit(workload):
+    """DRAINING/RETIRED/EJECTED replicas refuse new work at the seam the
+    router (and chaos wrappers) use."""
+    _, _, tree, _, _ = workload
+    router = _router(tree)
+    try:
+        rep = router.replicas()[0]
+        rep.begin_drain()
+        assert rep.state == DRAINING
+        with pytest.raises(ReplicaUnavailableError):
+            rep.submit(np.array([0, 0, 1, 1], np.int32), deadline_s=1.0)
+    finally:
+        router.stop()
+
+
+def test_submit_validates_strictly(workload):
+    _, _, tree, _, _ = workload
+    router = _router(tree)
+    try:
+        with pytest.raises(QueryValidationError):
+            router.submit(np.array([10, 10, 0, 0], np.int32))   # lo > hi
+        with pytest.raises(QueryValidationError):
+            router.submit(np.array([np.nan, 0.0, 1.0, 1.0]))
+        with pytest.raises(QueryValidationError):
+            router.submit(np.array([1, 2, 3], np.int32))
+    finally:
+        router.stop()
+
+
+def test_stopped_router_fails_fast(workload):
+    _, _, tree, _, _ = workload
+    router = _router(tree)
+    router.stop()
+    t = router.submit(np.array([0, 0, 1, 1], np.int32))
+    assert t.done and t.status == STATUS_FAILED and t.reason == "stopped"
+
+
+def test_expired_deadline_fails_not_hangs(workload):
+    """A routed request that cannot meet its deadline terminates as failed
+    (deadline) — the router never leaves a ticket pending forever."""
+    _, _, tree, _, _ = workload
+    router = _router(tree)
+    try:
+        t = router.submit(np.array([0, 0, 1, 1], np.int32), deadline_s=0.0)
+        assert t.wait(10.0)
+        assert t.status == STATUS_FAILED and t.reason in (
+            "deadline", "exhausted")
+    finally:
+        router.stop()
+
+
+# -------------------------------------------------------------- observability
+
+
+def test_aggregated_metrics_surface(workload):
+    """One scrape surface: router series unlabeled, per-replica server
+    series tagged replica=<name>, one HELP/TYPE block per metric name."""
+    _, queries, tree, _, _ = workload
+    router = _router(tree)
+    try:
+        _route_all(router, queries[:64])
+        text = router.prometheus_text()
+    finally:
+        router.stop()
+    assert "router_requests_total 64" in text
+    assert "router_replicas_healthy 2" in text
+    assert 'router_replicas{state="active"} 2' in text
+    assert 'serve_events_total{kind="served",replica="r0"}' in text
+    assert 'serve_events_total{kind="served",replica="r1"}' in text
+    assert 'serve_healthy{replica="r0"} 1' in text
+    assert 'replica="r0"' in text and "_bucket" in text
+    assert text.count("# TYPE serve_events_total counter") == 1
+    assert text.count("# TYPE router_requests_total counter") == 1
+    snap = router.snapshot()
+    assert "router" in snap and set(snap["replicas"]) == {"r0", "r1"}
+    assert "router_requests_total" in snap["router"]
+
+
+def test_metrics_dict_shape(workload):
+    _, queries, tree, _, _ = workload
+    router = _router(tree)
+    try:
+        _route_all(router, queries[:32])
+        m = router.metrics()
+    finally:
+        router.stop()
+    assert m["responses_ok"] == 32 and m["responses_failed"] == 0
+    assert m["requests"] == 32
+    assert set(m["replicas"]) == {"r0", "r1"}
+    assert all(s["state"] == ACTIVE for s in m["replicas"].values())
+    assert m["request_p50_s"] is not None
+    assert m["request_p50_s"] <= m["request_p99_s"]

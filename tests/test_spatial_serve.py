@@ -16,8 +16,8 @@ from repro.core.engine import QueryValidationError
 from repro.data import datasets, spider
 from repro.kernels import ref
 from repro.serve.spatial_serve import (
-    DEGRADED, HEALTHY, STATUS_EXPIRED, STATUS_OK, STATUS_SHED,
-    ServeConfig, SpatialServer)
+    DEGRADED, HEALTHY, STATUS_CANCELLED, STATUS_EXPIRED, STATUS_OK,
+    STATUS_SHED, ServeConfig, SpatialServer)
 
 
 def _mesh1():
@@ -106,6 +106,41 @@ def test_deadline_admission_shed(engine):
     t_no = srv.submit(rect, deadline_s=0.5)
     assert t_ok.status != STATUS_SHED
     assert t_no.status == STATUS_SHED and t_no.reason == "deadline"
+
+
+def test_zero_and_negative_deadline_shed_at_submit(engine):
+    """Satellite: an already-expired deadline is shed at submit — it never
+    occupies a batch slot waiting to be noticed at batch formation."""
+    srv = SpatialServer(engine, ServeConfig(batch_size=64), warmup=False)
+    rect = np.array([0, 0, 10, 10], np.int32)
+    for d in (0.0, -1.0):
+        t = srv.submit(rect, deadline_s=d)
+        assert t.done and t.status == STATUS_SHED
+        assert t.reason == "deadline"
+    assert srv.queue_depth == 0              # no batch slot consumed
+    m = srv.metrics()
+    assert m["shed"] == 2 and m["counters"]["shed_deadline"] == 2
+    assert m["submitted"] == 2
+
+
+def test_cancel_withdraws_queued_request(engine):
+    """A queued request can be withdrawn (hedging's loser path); a request
+    already completed cannot."""
+    srv = SpatialServer(engine, ServeConfig(batch_size=64), warmup=False)
+    rect = np.array([0, 0, 10, 10], np.int32)
+    t1 = srv.submit(rect, deadline_s=100.0)
+    t2 = srv.submit(rect, deadline_s=100.0)
+    assert srv.queue_depth == 2
+    assert srv.cancel(t1, reason="hedge_lost")
+    assert t1.done and t1.status == STATUS_CANCELLED
+    assert t1.reason == "hedge_lost" and t1.count is None
+    assert srv.queue_depth == 1
+    assert not srv.cancel(t1)                # already out of the queue
+    srv.pump()
+    assert t2.status == STATUS_OK
+    assert not srv.cancel(t2)                # already served
+    m = srv.metrics()
+    assert m["counters"]["cancelled"] == 1 and m["served"] == 1
 
 
 def test_expired_in_queue(engine):
