@@ -1,0 +1,191 @@
+"""Throughput benchmark for the repro.query surface (ids/kNN/radius/agg).
+
+Runs every query kind through the full offline engine path — validation,
+Morton ordering, ``stream_batches`` micro-batching, ``SpatialResult``
+assembly — on a scaled synthetic workload and records per-kind throughput
+plus overflow accounting into ``BENCH_query.json`` at the repo root.  The
+file is a committed perf baseline: ``benchmarks/regress.py`` gates each
+kind's queries/s against it (with a wider tolerance than the pipeline A/B —
+absolute throughput is noisier than a same-process speedup ratio).
+
+Correctness is asserted against the NumPy oracles on a workload slice
+before any timing is reported, so a number can never be recorded for a
+wrong kernel.
+
+Usage: ``PYTHONPATH=src:. python -m benchmarks.query_surface`` (or via
+``benchmarks/run.py --only query_surface``; ``regress`` runs it too).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import engine as beng
+from repro.core import rtree
+from repro.data import datasets, spider
+from repro.query import oracle
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_query.json")
+
+# Absolute qps across container runs wobbles more than an in-process A/B
+# ratio; the gate floor is correspondingly wider than regress's 20%.
+QUERY_TOLERANCE = 0.35
+
+KCAP = 64
+KNN_K = 8
+VERIFY_Q = 256       # oracle-checked slice (the full set times the bench)
+
+
+def _workload(full: bool):
+    n = 100_000 if full else 20_000
+    nq = 8192 if full else 2048
+    rects = spider.uniform(n, seed=5)
+    queries = datasets.make_queries(rects, 1.0, seed=6)
+    reps = -(-nq // len(queries))
+    queries = np.concatenate([queries] * reps)[:nq]
+    rng = np.random.default_rng(7)
+    points = rng.integers(0, spider.SCALE, (nq, 2)).astype(np.int32)
+    radii = rng.integers(0, spider.SCALE // 16, nq).astype(np.int32)
+    tree = rtree.build_str_3level(rects, *rtree.choose_parameters(n, 1))
+    return n, rects, queries, points, radii, tree
+
+
+def _verify(eng, queries, points, radii) -> None:
+    """Oracle gate on a slice: bit-exact ids/knn/radius, toleranced sums."""
+    pr, pi = eng.placed_rects, eng.placed_ids
+    q, p, r = queries[:VERIFY_Q], points[:VERIFY_Q], radii[:VERIFY_Q]
+    res = eng.query_ids(q, kcap=KCAP)
+    w_ids, w_cnt, w_ov = oracle.ids_oracle(q, pr, pi, kcap=KCAP)
+    np.testing.assert_array_equal(res.ids, w_ids)
+    np.testing.assert_array_equal(res.count, w_cnt)
+    np.testing.assert_array_equal(res.overflow, w_ov)
+    res = eng.query_knn(p, k=KNN_K)
+    w_d, w_i = oracle.knn_oracle(p, pr, pi, k=KNN_K)
+    np.testing.assert_array_equal(res.ids, w_i)
+    np.testing.assert_array_equal(res.distances, w_d)
+    res = eng.query_radius(p, r, kcap=KCAP)
+    w_ids, w_cnt, _ = oracle.radius_oracle(p, r, pr, pi, kcap=KCAP)
+    np.testing.assert_array_equal(res.ids, w_ids)
+    np.testing.assert_array_equal(res.count, w_cnt)
+    res = eng.query_aggregate(q)
+    w_cnt, w_sums, w_bbox = oracle.aggregate_oracle(q, pr)
+    np.testing.assert_array_equal(res.count, w_cnt)
+    np.testing.assert_array_equal(res.bbox, w_bbox)
+    np.testing.assert_allclose(res.aggregates["sums"], w_sums,
+                               rtol=oracle.AGG_RTOL, atol=oracle.AGG_ATOL)
+
+
+def _median_time(fn, repeats: int = 3) -> float:
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def measure(full: bool = False) -> dict:
+    n, rects, queries, points, radii, tree = _workload(full)
+    nq = len(queries)
+    eng = beng.BroadcastEngine(tree, common.mesh1(), batch_size=512)
+    _verify(eng, queries, points, radii)
+
+    rows = []
+
+    def bench(kind, fn, result, extra=None):
+        t = _median_time(fn)
+        row = dict(kind=kind, num_queries=nq, wall_s=t, qps=nq / t)
+        if result.overflow is not None:
+            ov = result.overflow
+            row.update(
+                kcap=KCAP,
+                overflow_queries=int((ov > 0).sum()),
+                overflow_rate=float((ov > 0).mean()),
+                overflow_ids_total=int(ov.sum()),
+            )
+        if extra:
+            row.update(extra)
+        rows.append(row)
+        common.emit(f"query_surface/{kind}", t,
+                    f"qps={row['qps']:.0f}"
+                    + (f" overflow_rate={row['overflow_rate']:.3f}"
+                       if "overflow_rate" in row else ""))
+
+    res_ids = eng.query_ids(queries, kcap=KCAP)          # warmup/compile
+    bench("ids", lambda: eng.query_ids(queries, kcap=KCAP), res_ids)
+    res_knn = eng.query_knn(points, k=KNN_K)
+    bench("knn", lambda: eng.query_knn(points, k=KNN_K), res_knn,
+          extra=dict(k=KNN_K))
+    res_rad = eng.query_radius(points, radii, kcap=KCAP)
+    bench("radius", lambda: eng.query_radius(points, radii, kcap=KCAP),
+          res_rad)
+    res_agg = eng.query_aggregate(queries)
+    bench("aggregate", lambda: eng.query_aggregate(queries), res_agg)
+
+    return {
+        "workload": dict(num_rects=n, num_queries=nq, kcap=KCAP, knn_k=KNN_K,
+                         distribution="uniform", seed=5,
+                         verified_queries=VERIFY_Q),
+        "kinds": rows,
+    }
+
+
+def load_baseline() -> dict | None:
+    """The committed BENCH_query.json; ``None`` disables the gate."""
+    try:
+        with open(OUT_PATH) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return None
+
+
+def regression_failures(report: dict, baseline: dict | None,
+                        tolerance: float = QUERY_TOLERANCE) -> list[str]:
+    """Kinds whose throughput fell more than ``tolerance`` below the
+    committed baseline, as human-readable lines (empty = gate passes)."""
+    if not baseline:
+        return []
+    fails = []
+    base_rows = {r["kind"]: r for r in baseline.get("kinds", [])}
+    for row in report.get("kinds", []):
+        base = base_rows.get(row["kind"])
+        if not base:
+            continue
+        floor = base["qps"] * (1.0 - tolerance)
+        if row["qps"] < floor:
+            fails.append(
+                f"query_{row['kind']}: {row['qps']:.0f} qps fell below "
+                f"floor {floor:.0f} (committed {base['qps']:.0f} "
+                f"- {tolerance:.0%})")
+    return fails
+
+
+def gate_and_record(report: dict) -> None:
+    """Gate against the committed baseline and persist on pass; on failure
+    exit non-zero and leave BENCH_query.json untouched (no downward
+    ratchet), mirroring regress's pipeline gate."""
+    fails = regression_failures(report, load_baseline())
+    if fails:
+        for line in fails:
+            common.emit("query_surface/GATE-FAIL", 0.0, line)
+        raise SystemExit(
+            "query-surface regression gate failed; baseline NOT "
+            "overwritten:\n  " + "\n  ".join(fails))
+    with open(OUT_PATH, "w") as fh:
+        json.dump(report, fh, indent=2, default=float)
+    common.emit("query_surface/report", 0.0,
+                f"wrote {os.path.abspath(OUT_PATH)}")
+
+
+def run(full: bool = False) -> list[dict]:
+    report = measure(full)
+    gate_and_record(report)
+    return [report]
+
+
+if __name__ == "__main__":
+    run()

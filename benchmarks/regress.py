@@ -313,7 +313,15 @@ def run(full: bool = False) -> list[dict]:
     report["phases"] = _phase_accounting(rects, queries, mesh, n, nq)
 
     _gate_and_record(report)
-    return [report]
+
+    # --- query-surface throughput (ids/knn/radius/aggregate) ---------------
+    # Separate baseline file (BENCH_query.json), same no-downward-ratchet
+    # discipline; rides this entry point so one `-m benchmarks.regress`
+    # invocation gates the whole perf trajectory.
+    from benchmarks import query_surface
+    q_report = query_surface.measure(full=full)
+    query_surface.gate_and_record(q_report)
+    return [report, q_report]
 
 
 def _phase_accounting(rects, queries, mesh, n, nq) -> dict:

@@ -21,8 +21,8 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (fig8_strong_scaling, fig9_tile_sweep,
-                            fig10_batch_breakdown, regress, serve_latency,
-                            table2_cpu_vs_pim,
+                            fig10_batch_breakdown, query_surface, regress,
+                            serve_latency, table2_cpu_vs_pim,
                             table3_broadcast_vs_subtree,
                             table4_memory_profile, table5_energy)
     benches = {
@@ -35,6 +35,7 @@ def main() -> int:
         "fig10": fig10_batch_breakdown.run,
         "regress": regress.run,
         "serve_latency": serve_latency.run,
+        "query_surface": query_surface.run,
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

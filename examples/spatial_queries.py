@@ -1,7 +1,10 @@
 """End-to-end driver for the paper's experiment matrix (scaled): all three
 engines (CPU Algorithm 1, subtree baseline, broadcast) over two datasets ×
 two query fractions, with agreement checks and the communication-volume
-comparison that motivates the broadcast design (paper Table III / Fig 7).
+comparison that motivates the broadcast design (paper Table III / Fig 7) —
+then the materializing query surface (DESIGN.md Sec 14): ID lists with
+overflow accounting, kNN, radius, and on-fabric aggregates, each checked
+against the NumPy oracle.
 
     PYTHONPATH=src python examples/spatial_queries.py
 """
@@ -16,6 +19,7 @@ from repro import compat
 from repro.core import cpu_baseline, engine, rtree, subtree
 from repro.data import datasets
 from repro.kernels import ref
+from repro.query import oracle
 
 mesh = compat.make_mesh((1, 1), ("data", "model"))
 
@@ -44,3 +48,41 @@ for name, n in (("sports", 50_000), ("lakes", 120_000)):
               f" | subtree {t_s:.2f}s | comm bytes broadcast/subtree = "
               f"{bcast / 1e6:.1f}MB / {sub / 1e6:.1f}MB "
               f"({sub / bcast:.1f}x)  [engines agree ✓]")
+
+# ---------------------------------------------------------------------------
+# Materializing query surface (DESIGN.md Sec 14): same engines, four more
+# kinds, every answer cross-checked against the NumPy oracle.
+rects = datasets.load("sports", n=20_000)
+b, f = rtree.choose_parameters(len(rects), 64)
+b_eng = engine.BroadcastEngine(rtree.build_str_3level(rects, b, f), mesh,
+                               batch_size=512)
+queries = datasets.make_queries(rects, 0.02, seed=11)[:1024]
+rng = np.random.default_rng(7)
+points = rects[rng.integers(0, len(rects), 1024), :2].astype(np.int32)
+radii = rng.integers(0, 40_000, 1024).astype(np.int32)
+pr, pi = b_eng.placed_rects, b_eng.placed_ids
+
+res = b_eng.query_ids(queries, kcap=64)
+w_ids, w_cnt, w_ov = oracle.ids_oracle(queries, pr, pi, kcap=64)
+assert (res.ids == w_ids).all() and (res.count == w_cnt).all()
+print(f"ids: q0 matches {res.count[0]} rects -> {res.ids_for(0)[:6]}... | "
+      f"{res.truncated.sum()} of {len(res)} queries truncated at kcap=64 "
+      f"({res.total_overflow} ids dropped, accounted)  [oracle ✓]")
+
+knn = b_eng.query_knn(points, k=8)
+w_d, w_i = oracle.knn_oracle(points, pr, pi, k=8)
+assert (knn.ids == w_i).all() and (knn.distances == w_d).all()
+print(f"knn: p0 -> ids {knn.ids[0][:4]} d2 {knn.distances[0][:4]}  [oracle ✓]")
+
+near = b_eng.query_radius(points, radii, kcap=64)
+w_ids, w_cnt, _ = oracle.radius_oracle(points, radii, pr, pi, kcap=64)
+assert (near.ids == w_ids).all() and (near.count == w_cnt).all()
+print(f"radius: p0 within r={radii[0]} -> {near.count[0]} rects  [oracle ✓]")
+
+agg = b_eng.query_aggregate(queries)
+w_cnt, w_sums, w_bbox = oracle.aggregate_oracle(queries, pr)
+assert (agg.count == w_cnt).all() and (agg.bbox == w_bbox).all()
+np.testing.assert_allclose(agg.aggregates["sums"], w_sums,
+                           rtol=oracle.AGG_RTOL, atol=oracle.AGG_ATOL)
+print(f"aggregate: q0 count {agg.count[0]} centroid {agg.centroid[0]} "
+      f"bbox {agg.bbox[0]}  [oracle ✓]")

@@ -42,6 +42,14 @@ PL111 hot-path-wall-clock-io  in hot-path modules (``repro/core/``,
                               or the ``repro.obs`` tracer) and no ``print()``
                               (output goes through metrics/trace, never
                               stdout on the hot path).
+PL113 candidate-mask-d2h      in query modules (``repro/**/query/``): no
+                              host materialization (``np.asarray``/
+                              ``np.array``/``jax.device_get``) of a device
+                              comparison/mask expression.  A ``(Q, R)`` or
+                              ``(Q, Kcap)``-bool candidate mask pulled to the
+                              host scales with the *corpus*, not the answer —
+                              results cross the boundary only as fixed-size
+                              ``(Q, Kcap)`` ID buffers or per-query scalars.
 PL112 silent-failover         in serving code (``repro/serve/``): an
                               ``except`` handler that reroutes work
                               (``submit``/``resubmit``/``reroute``/
@@ -451,6 +459,59 @@ def check_silent_failover(tree, src, path):
                 f"except handler reroutes ({sorted(reroutes)[0]}) without "
                 "recording the failover — increment a failover counter or "
                 "emit a trace event inside the handler")
+
+
+_MASK_BUILDERS = {
+    "logical_and", "logical_or", "logical_xor", "logical_not",
+    "less", "less_equal", "greater", "greater_equal", "equal", "not_equal",
+    "isin", "isclose",
+}
+
+
+def _contains_device_mask(node: ast.AST, info: ModuleInfo) -> bool:
+    """True if the subtree builds a boolean mask out of device arrays:
+    a comparison / bitwise-bool combine / jnp mask builder over jnp
+    operands."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Compare) and info.contains_jnp(sub):
+            return True
+        if (isinstance(sub, ast.BinOp)
+                and isinstance(sub.op, (ast.BitAnd, ast.BitOr, ast.BitXor))
+                and info.contains_jnp(sub)):
+            return True
+        if isinstance(sub, ast.UnaryOp) and isinstance(sub.op, ast.Invert) \
+                and info.contains_jnp(sub):
+            return True
+        if isinstance(sub, ast.Call):
+            d = dotted(sub.func, info.aliases) or ""
+            if (d.startswith("jax.numpy.")
+                    and d.rsplit(".", 1)[-1] in _MASK_BUILDERS):
+                return True
+    return False
+
+
+@register("PL113", SCOPE_SRC,
+          "host materialization of a device candidate mask in query code — "
+          "candidate sets stay on-fabric; only fixed-size (Q, Kcap) ID "
+          "buffers or per-query scalars cross the boundary")
+def check_candidate_mask_d2h(tree, src, path):
+    parts = os.path.normpath(path).split(os.sep)
+    if "query" not in parts:
+        return
+    info = ModuleInfo(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func, info.aliases)
+        if d not in ("numpy.asarray", "numpy.array", "jax.device_get"):
+            continue
+        if any(_contains_device_mask(a, info) for a in node.args):
+            yield Finding(
+                "PL113", path, node.lineno,
+                f"{d.replace('numpy', 'np')} over a device mask expression "
+                "— a host candidate list scales with the corpus, not the "
+                "answer; keep the mask on-fabric and materialize only the "
+                "(Q, Kcap) ID buffer")
 
 
 @register("PL109", SCOPE_SRC,

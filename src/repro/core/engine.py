@@ -60,7 +60,8 @@ class QueryValidationError(ValueError):
 
 
 def validate_queries(
-    queries, *, strict: bool = False, where: str = "queries"
+    queries, *, strict: bool = False, where: str = "queries",
+    points: bool = False,
 ) -> np.ndarray:
     """Validate and canonicalize a query batch at the engine boundary.
 
@@ -79,12 +80,21 @@ def validate_queries(
       when ``strict=True`` — the serving admission path uses strict mode so
       a malformed request is refused, not reinterpreted).
 
-    Returns a fresh ``(Q, 4) int32`` array safe for the device pipeline.
+    With ``points=True`` the batch is a ``(Q, 2)`` array of ``[x, y]`` point
+    queries (kNN / radius kinds) and is validated as such — an explicit mode
+    rather than aliasing ``(x, y, x, y)`` degenerate rects through the rect
+    path, so shape errors and the lo>hi rules can't misfire on points.
+
+    Returns a fresh ``(Q, 4)`` (or ``(Q, 2)``) int32 array safe for the
+    device pipeline.
     """
+    width = 2 if points else 4
+    kind = "points" if points else "rects"
     arr = np.asarray(queries)
-    if arr.ndim != 2 or arr.shape[-1] != 4:
+    if arr.ndim != 2 or arr.shape[-1] != width:
         raise QueryValidationError(
-            f"{where}: expected shape (Q, 4), got {arr.shape}")
+            f"{where}: expected {kind} of shape (Q, {width}), "
+            f"got {arr.shape}")
     if arr.dtype.kind == "f":
         if arr.size and not np.isfinite(arr).all():
             raise QueryValidationError(
@@ -102,6 +112,8 @@ def validate_queries(
             f"{where}: coordinates outside the int32 range would wrap "
             "on the device cast")
     out = arr.astype(np.int32, copy=True)
+    if points:
+        return np.ascontiguousarray(out, dtype=np.int32)
     if out.size:
         flipped = (out[:, 0] > out[:, 2]) | (out[:, 1] > out[:, 3])
         if flipped.any():
@@ -113,6 +125,52 @@ def validate_queries(
             hi = np.maximum(out[:, :2], out[:, 2:])
             out = np.concatenate([lo, hi], axis=1)
     return np.ascontiguousarray(out, dtype=np.int32)
+
+
+def validate_radii(radii, *, num_points: int | None = None,
+                   where: str = "radii") -> np.ndarray:
+    """Validate a per-query radius vector for the radius query kind.
+
+    NaN/inf, fractional, negative, or out-of-int32-range radii raise (a NaN
+    radius compares false against every distance and silently returns empty
+    results — the exact failure mode the boundary exists to catch).  Returns
+    a fresh ``(Q,) int32`` array.
+    """
+    arr = np.asarray(radii)
+    if arr.ndim != 1:
+        raise QueryValidationError(
+            f"{where}: expected shape (Q,), got {arr.shape}")
+    if num_points is not None and arr.shape[0] != num_points:
+        raise QueryValidationError(
+            f"{where}: {arr.shape[0]} radii for {num_points} points")
+    if arr.dtype.kind == "f":
+        if arr.size and not np.isfinite(arr).all():
+            raise QueryValidationError(
+                f"{where}: NaN/inf radii are not valid")
+        if arr.size and not (np.mod(arr, 1) == 0).all():
+            raise QueryValidationError(
+                f"{where}: fractional radii — scale to the fixed-precision "
+                "int32 grid first (spider.SCALE)")
+    elif arr.dtype.kind not in "iu":
+        raise QueryValidationError(
+            f"{where}: dtype {arr.dtype} is not a radius dtype")
+    if arr.size and (arr.min() < 0 or arr.max() > _INT32_MAX):
+        raise QueryValidationError(
+            f"{where}: radii must be in [0, int32 max]")
+    return np.ascontiguousarray(arr.astype(np.int32, copy=True))
+
+
+def validate_k(k, *, where: str = "k") -> int:
+    """Validate a kNN ``k``: a positive Python int (k <= 0 rejected)."""
+    try:
+        kv = int(k)
+    except (TypeError, ValueError):
+        raise QueryValidationError(f"{where}: k must be an integer, got {k!r}")
+    if isinstance(k, float) and k != kv:
+        raise QueryValidationError(f"{where}: k must be integral, got {k!r}")
+    if kv <= 0:
+        raise QueryValidationError(f"{where}: k must be >= 1, got {kv}")
+    return kv
 
 
 def _mesh_device_count(mesh: jax.sharding.Mesh) -> int:
@@ -139,6 +197,10 @@ class ShardedLayout:
     tile: int | None = None
     rect_tile_mbrs: np.ndarray | None = None   # (D, NT, 4) int32
     tile_occupancy: np.ndarray | None = None   # (D, NT) int32 valid rects
+    # Source IDs aligned with leaf_rects_flat rows (-1 for padding).  Built
+    # from tree.leaf_ids; hand-built trees without IDs get BFS-packed
+    # positional IDs so the query subsystem is always well-defined.
+    leaf_ids_flat: np.ndarray | None = None    # (D * R_loc,) int32
 
     @property
     def leaf_bytes(self) -> int:
@@ -191,19 +253,36 @@ def _shard_tree_inner(tree, num_devices, tile):
     d = int(num_devices)
     leaf_rects = np.asarray(tree.leaf_rects)           # (L, B, 4)
     l, b, _ = leaf_rects.shape
+    if getattr(tree, "leaf_ids", None) is not None:
+        leaf_ids = np.asarray(tree.leaf_ids, dtype=np.int32)  # (L, B)
+    else:
+        # Hand-built tree without source IDs: BFS-packed positional IDs
+        # over the valid slots (padding slots get -1).
+        valid = leaf_rects[..., 0] <= leaf_rects[..., 2]
+        leaf_ids = np.where(
+            valid, np.cumsum(valid).reshape(l, b) - 1, -1
+        ).astype(np.int32)
     lp = math.ceil(l / d)
     pad = d * lp - l
     if pad:
         leaf_rects = np.concatenate(
             [leaf_rects, np.tile(EMPTY_RECT, (pad, b, 1))], axis=0
         )
+        leaf_ids = np.concatenate(
+            [leaf_ids, np.full((pad, b), -1, dtype=np.int32)], axis=0
+        )
     per_dev = leaf_rects.reshape(d, lp * b, 4)
+    per_dev_ids = leaf_ids.reshape(d, lp * b)
     rect_tile_mbrs = tile_occupancy = None
     if tile is not None:
         rp = math.ceil(lp * b / tile) * tile
         if rp != lp * b:
             per_dev = np.concatenate(
                 [per_dev, np.tile(EMPTY_RECT, (d, rp - lp * b, 1))], axis=1
+            )
+            per_dev_ids = np.concatenate(
+                [per_dev_ids,
+                 np.full((d, rp - lp * b), -1, dtype=np.int32)], axis=1
             )
         tiles = per_dev.reshape(d, rp // tile, tile, 4)
         rect_tile_mbrs = mbr_of(tiles)
@@ -238,6 +317,7 @@ def _shard_tree_inner(tree, num_devices, tile):
         tile=tile,
         rect_tile_mbrs=rect_tile_mbrs,
         tile_occupancy=tile_occupancy,
+        leaf_ids_flat=per_dev_ids.reshape(-1).astype(np.int32),
     )
 
 
@@ -324,7 +404,9 @@ def stream_batches(
     queries: np.ndarray,
     batch_size: int,
     rep_sharding: jax.sharding.NamedSharding,
-) -> np.ndarray:
+    *,
+    pad_row: np.ndarray | None = None,
+) -> Any:
     """Pipelined fixed-shape batch loop (DESIGN.md Sec 5).
 
     The next batch is staged (``device_put``) while the current one computes
@@ -332,6 +414,13 @@ def stream_batches(
     query buffers are donated by the step and host references dropped as soon
     as each dispatch is issued.  Results are synced once at the end instead
     of per batch.
+
+    ``step`` may return a single array or any pytree of arrays whose leaves
+    all carry the query axis first (the query-kind steps return tuples);
+    leaves are concatenated across batches and sliced back to the true query
+    count.  ``pad_row`` overrides the EMPTY-rect padding row for payloads
+    whose padding sentinel differs (e.g. the radius kind's negative-radius
+    rows) — it must be a no-match row for the step's predicate.
 
     Tracing (DESIGN.md Sec 12): with the tracer enabled each batch records a
     ``stage`` (h2d) and ``dispatch`` (kernel) span and the loop ends with one
@@ -348,12 +437,15 @@ def stream_batches(
         return np.empty(0, dtype=np.int32)
     bs = int(batch_size)
     nb = math.ceil(q / bs)
+    if pad_row is None:
+        pad_row = EMPTY_RECT
+    pad_row = np.asarray(pad_row, dtype=np.int32).reshape(1, -1)
     with obs_trace.span("stream_batches", phase=obs_phases.HOST,
                         batches=nb, batch_size=bs, queries=q):
         pad = nb * bs - q
         if pad:
-            queries = np.concatenate([queries, np.tile(EMPTY_RECT, (pad, 1))])
-        batches = queries.reshape(nb, bs, 4)
+            queries = np.concatenate([queries, np.tile(pad_row, (pad, 1))])
+        batches = queries.reshape(nb, bs, queries.shape[1])
 
         outs = []
         with obs_trace.span("stage", phase=obs_phases.H2D, batch=0):
@@ -383,10 +475,141 @@ def stream_batches(
         with obs_trace.span("sync_retrieve", phase=obs_phases.D2H,
                             result_bytes=q * 4):
             jax.block_until_ready(outs)    # pallint: disable=PL102
-            return np.concatenate(jax.device_get(outs))[:q]
+            host = jax.device_get(outs)
+            return jax.tree_util.tree_map(
+                lambda *xs: np.concatenate(xs)[:q], host[0], *host[1:])
 
 
-class BroadcastEngine:
+class QueryKindMixin:
+    """Result-materializing query surface shared by both engines.
+
+    Adds ``query_ids`` / ``query_knn`` / ``query_radius`` /
+    ``query_aggregate`` on top of the count path (DESIGN.md Sec 14).  Host
+    classes provide ``mesh``, ``batch_size``, ``_rep_sh``, ``_impl`` /
+    ``_tq`` / ``_tr``, ``trace_count``, a ``_kind_operands()`` tuple in the
+    uniform ``(coords, ids, tile_mbrs, covers)`` order, and the placed
+    host-side arrays (``placed_rects`` / ``placed_ids``) the oracles and
+    the serving degradation path consume.
+
+    Kind steps are compiled lazily and cached per ``(kind, parameter)`` —
+    a second ``query_knn(..., k=8)`` call reuses the compiled step, and the
+    serving layer reaches the same cache through :meth:`kind_step`.
+    """
+
+    _kind_steps: dict
+
+    def _kind_operands(self):
+        raise NotImplementedError
+
+    @property
+    def placed_rects(self) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def placed_ids(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def _bump_trace(self):
+        self.trace_count += 1
+
+    def kind_step(self, kind: str, param: int | None):
+        """The cached jitted step for ``kind`` (param: kcap or k)."""
+        from repro.query import pipelines as qp  # lazy: engine ↔ query cycle
+        key = (kind, param)
+        step = self._kind_steps.get(key)
+        if step is None:
+            kw = {}
+            if kind in ("ids", "radius"):
+                kw["kcap"] = param
+            elif kind == "knn":
+                kw["k"] = param
+            step = qp.make_kind_step(
+                self.mesh, kind, impl=self._impl, tq=self._tq, tr=self._tr,
+                on_trace=self._bump_trace, **kw)
+            self._kind_steps[key] = step
+        return step
+
+    def _empty_result(self, kind: str, param: int | None):
+        from repro.query import pipelines as qp
+        if kind in ("ids", "radius"):
+            out = (np.zeros((0, param), np.int32), np.zeros((0,), np.int32))
+        elif kind == "knn":
+            out = (np.zeros((0, param), np.float32),
+                   np.zeros((0, param), np.int32))
+        else:
+            out = (np.zeros((0,), np.int32), np.zeros((0, 3), np.float32),
+                   np.zeros((0, 4), np.int32))
+        return qp.assemble(kind, out, kcap=param or 0)
+
+    def _run_kind(self, kind: str, payload: np.ndarray, param: int | None):
+        from repro.query import pipelines as qp
+        q = int(payload.shape[0])
+        name = type(self).__name__
+        with obs_trace.span(f"{name}.query_{kind}", phase=obs_phases.HOST,
+                            queries=q, query_kind=kind):
+            if q == 0:
+                return self._empty_result(kind, param)
+            inv = None
+            if getattr(self, "sort_queries", False):
+                order = morton_order(qp.payload_rects(kind, payload))
+                inv = np.argsort(order, kind="stable")
+                payload = payload[order]
+            out = stream_batches(
+                self.kind_step(kind, param), self._kind_operands(),
+                payload, self.batch_size, self._rep_sh,
+                pad_row=qp.PAD_ROWS[kind])
+            if inv is not None:
+                out = jax.tree_util.tree_map(lambda x: x[inv], out)
+            return qp.assemble(kind, out,
+                               kcap=param if param is not None else 0)
+
+    # ------------------------------------------------------- public surface
+
+    def query_ids(self, queries: np.ndarray, *, kcap: int = 64):
+        """Materialized range query: the source IDs of every rect each query
+        rect overlaps, first ``kcap`` per query in placed order, with true
+        totals and overflow accounting (:class:`repro.query.SpatialResult`).
+        """
+        from repro.query import pipelines as qp
+        queries = validate_queries(
+            queries, where=f"{type(self).__name__}.query_ids")
+        kcap = validate_k(kcap, where="query_ids.kcap")
+        return self._run_kind("ids", qp.pack_rects(queries), kcap)
+
+    def query_knn(self, points: np.ndarray, k: int = 8):
+        """k nearest rects per query point under the shared squared-f32
+        metric, ties broken by ascending source ID."""
+        from repro.query import pipelines as qp
+        points = validate_queries(
+            points, points=True, where=f"{type(self).__name__}.query_knn")
+        k = validate_k(k, where="query_knn.k")
+        return self._run_kind("knn", qp.pack_knn(points), k)
+
+    def query_radius(self, points: np.ndarray, radii: np.ndarray,
+                     *, kcap: int = 64):
+        """Closed-ball radius query: IDs of rects within ``radii[i]`` of
+        ``points[i]`` (squared-f32 metric), capped at ``kcap`` with overflow
+        accounting."""
+        from repro.query import pipelines as qp
+        points = validate_queries(
+            points, points=True, where=f"{type(self).__name__}.query_radius")
+        radii = validate_radii(
+            radii, num_points=points.shape[0],
+            where=f"{type(self).__name__}.query_radius")
+        kcap = validate_k(kcap, where="query_radius.kcap")
+        return self._run_kind("radius", qp.pack_radius(points, radii), kcap)
+
+    def query_aggregate(self, queries: np.ndarray):
+        """On-fabric aggregates per query rect: exact count and match bbox,
+        float32 centroid/mean-area sums (reduced in-kernel and combined
+        across devices without materializing any candidate list)."""
+        from repro.query import pipelines as qp
+        queries = validate_queries(
+            queries, where=f"{type(self).__name__}.query_aggregate")
+        return self._run_kind("aggregate", qp.pack_rects(queries), None)
+
+
+class BroadcastEngine(QueryKindMixin):
     """End-to-end broadcast engine: host build → device placement → batched
     queries.  Mirrors the paper's Fig. 3 workflow.  ``sort_queries`` applies
     Morton ordering once over the whole query set per :meth:`query` call
@@ -409,6 +632,8 @@ class BroadcastEngine:
         self.num_devices = _mesh_device_count(mesh)
         self.layout = shard_tree(tree, self.num_devices, tile=tr)
         self.trace_count = 0
+        self._impl, self._tq, self._tr = impl, tq, tr
+        self._kind_steps = {}
 
         axes = tuple(mesh.axis_names)
         coords_sh = jax.sharding.NamedSharding(
@@ -429,11 +654,15 @@ class BroadcastEngine:
             self.rect_tile_mbrs = jax.device_put(
                 self.layout.rect_tile_mbrs, meta_sh)
             self.cover_mbrs = jax.device_put(self.layout.cover_mbrs, meta_sh)
+            # source IDs ride the same sharding as the leaf slices so the
+            # materializing kinds can return them without any host gather
+            self.leaf_ids = jax.device_put(self.layout.leaf_ids_flat, meta_sh)
             if obs_trace.enabled():
                 # only when tracing: make the placement span measure the
                 # actual transfer, not just the async dispatch
                 jax.block_until_ready(             # pallint: disable=PL102
-                    (self.leaf_coords, self.rect_tile_mbrs, self.cover_mbrs))
+                    (self.leaf_coords, self.rect_tile_mbrs, self.cover_mbrs,
+                     self.leaf_ids))
         self._rep_sh = rep_sh
 
         def _count_trace():
@@ -459,6 +688,21 @@ class BroadcastEngine:
             (self.leaf_coords, self.rect_tile_mbrs, self.cover_mbrs),
             queries, self.batch_size, self._rep_sh,
         )
+
+    # ---- query-kind surface (QueryKindMixin) -----------------------------
+    def _kind_operands(self):
+        return (self.leaf_coords, self.leaf_ids, self.rect_tile_mbrs,
+                self.cover_mbrs)
+
+    @property
+    def placed_rects(self) -> np.ndarray:
+        """(N, 4) host copy of the placed leaf rects in device order."""
+        return self.layout.leaf_rects_flat
+
+    @property
+    def placed_ids(self) -> np.ndarray:
+        """(N,) source IDs aligned with :attr:`placed_rects` (-1 padding)."""
+        return self.layout.leaf_ids_flat
 
     # ---- communication-volume model (paper Figs. 7/10, Table III) --------
     def transfer_stats(self, num_queries: int) -> dict[str, int]:

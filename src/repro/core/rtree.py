@@ -127,11 +127,17 @@ def _build_str_3level_inner(rects, leaf_capacity, fanout):
     # give exact MBRs without masking.
     order = str_pack(rects, b)
     packed = rects[order]
+    # Source IDs ride along with the packed rects so result materialization
+    # can return indices into the *input* array (-1 marks padding).
+    packed_ids = order.astype(np.int32)
     num_leaves = math.ceil(n / b)
     pad = num_leaves * b - n
     if pad:
         packed = np.concatenate([packed, np.tile(EMPTY_RECT, (pad, 1))])
+        packed_ids = np.concatenate(
+            [packed_ids, np.full(pad, -1, dtype=np.int32)])
     leaf_rects = packed.reshape(num_leaves, b, 4)
+    leaf_ids = packed_ids.reshape(num_leaves, b)
     leaf_counts = np.full(num_leaves, b, dtype=np.int32)
     leaf_counts[-1] = b - pad
     assert (leaf_counts > 0).all(), "STR packing must not create empty leaves"
@@ -144,6 +150,7 @@ def _build_str_3level_inner(rects, leaf_capacity, fanout):
     leaf_rects = leaf_rects[l1_order]
     leaf_counts = leaf_counts[l1_order]
     leaf_mbrs = leaf_mbrs[l1_order]
+    leaf_ids = leaf_ids[l1_order]
 
     num_l1 = math.ceil(num_leaves / f)
     l1_child_start = (np.arange(num_l1, dtype=np.int32) * f).astype(np.int32)
@@ -164,6 +171,7 @@ def _build_str_3level_inner(rects, leaf_capacity, fanout):
         leaf_mbrs=leaf_mbrs,
         leaf_counts=leaf_counts,
         leaf_rects=leaf_rects,
+        leaf_ids=leaf_ids,
     )
 
 

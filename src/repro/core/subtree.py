@@ -34,7 +34,8 @@ import numpy as np
 
 from repro import compat
 from repro.core import rtree
-from repro.core.engine import stream_batches, validate_queries
+from repro.core.engine import (
+    QueryKindMixin, stream_batches, validate_queries)
 from repro.core.types import EMPTY_RECT, TopDownNode, mbr_of
 from repro.kernels import ops
 from repro.obs import phases as obs_phases
@@ -55,6 +56,10 @@ class SubtreeLayout:
     num_devices: int
     tile: int | None = None
     rect_tile_mbrs: np.ndarray | None = None   # (D, NT, 4) int32
+    # Source IDs aligned with ``rects`` slots (-1 for EMPTY padding): the
+    # index of each placed rect in the *input* array of build_layout, so the
+    # query subsystem returns IDs that survive the top-down partitioning.
+    rect_ids: np.ndarray | None = None         # (D, Rp) int32
 
     @property
     def scatter_bytes(self) -> int:
@@ -80,21 +85,47 @@ def build_layout(
         return _build_layout_inner(rects, num_devices, leaf_capacity, tile)
 
 
+def _source_ids(input_rects: np.ndarray, collected: np.ndarray) -> np.ndarray:
+    """Match each collected (partitioned) rect back to its input index.
+
+    The top-down build permutes rows without recording the permutation;
+    because ``collected`` is exactly a row-permutation of ``input_rects``,
+    sorting both lexicographically aligns them.  Duplicate rects are
+    assigned their tied source indices deterministically (ascending on both
+    sides), which is all the query surface needs: identical coordinates are
+    interchangeable under every distance/overlap predicate, and the
+    (distance, id) tie-break sees the same id multiset as the oracle.
+    """
+    inp = np.ascontiguousarray(np.asarray(input_rects, dtype=np.int32))
+    coll = np.ascontiguousarray(np.asarray(collected, dtype=np.int32))
+    assert inp.shape == coll.shape, (inp.shape, coll.shape)
+    in_order = np.lexsort(inp.T[::-1])
+    coll_order = np.lexsort(coll.T[::-1])
+    ids = np.empty(inp.shape[0], dtype=np.int32)
+    ids[coll_order] = in_order.astype(np.int32)
+    return ids
+
+
 def _build_layout_inner(rects, num_devices, leaf_capacity, tile):
     root = rtree.build_fanout_constrained(rects, num_devices, leaf_capacity)
     subs = rtree.subtree_partitions(root, num_devices)
     per_dev = [_collect_rects(s) for s in subs]
     sizes = [r.shape[0] for r in per_dev]
+    all_ids = _source_ids(rects, np.concatenate(per_dev, axis=0))
     rmax = max(sizes)
     if tile is not None:
         rmax = math.ceil(rmax / tile) * tile
     d = num_devices
     out = np.tile(EMPTY_RECT, (d, rmax, 1))
+    out_ids = np.full((d, rmax), -1, dtype=np.int32)
     mbrs = np.tile(EMPTY_RECT, (d, 1))
     # byte counter, not an index — a true 64-bit payload
     sbytes = np.zeros(d, dtype=np.int64)    # pallint: disable=PL109
+    id_lo = 0
     for i, r in enumerate(per_dev):
         out[i, : r.shape[0]] = r
+        out_ids[i, : r.shape[0]] = all_ids[id_lo: id_lo + r.shape[0]]
+        id_lo += r.shape[0]
         mbrs[i] = subs[i].mbr
         sbytes[i] = subs[i].serialized_bytes()
     rect_tile_mbrs = None
@@ -112,6 +143,7 @@ def _build_layout_inner(rects, num_devices, leaf_capacity, tile):
         num_devices=d,
         tile=tile,
         rect_tile_mbrs=rect_tile_mbrs,
+        rect_ids=out_ids,
     )
 
 
@@ -152,7 +184,7 @@ def make_query_step(
     return jax.jit(fn, donate_argnums=(3,) if donate_queries else ())
 
 
-class SubtreeEngine:
+class SubtreeEngine(QueryKindMixin):
     """Baseline PIM R-tree engine: one subtree per device."""
 
     def __init__(
@@ -172,6 +204,8 @@ class SubtreeEngine:
         self.num_devices = d
         self.layout = build_layout(rects, d, leaf_capacity, tile=tr)
         self.trace_count = 0
+        self._impl, self._tq, self._tr = impl, tq, tr
+        self._kind_steps = {}
 
         axes = tuple(mesh.axis_names)
         coords_sh = jax.sharding.NamedSharding(
@@ -189,11 +223,17 @@ class SubtreeEngine:
             self.dev_tile_mbrs = jax.device_put(
                 self.layout.rect_tile_mbrs, shard_sh)
             self.dev_mbrs = jax.device_put(self.layout.root_mbrs, shard_sh)
+            # source IDs ride the same sharding as the subtree slices so the
+            # materializing kinds can return them without any host gather
+            self.dev_ids = jax.device_put(
+                np.ascontiguousarray(self.layout.rect_ids.reshape(-1)),
+                shard_sh)
             if obs_trace.enabled():
                 # only when tracing: charge the actual transfer to the span,
                 # not just the async dispatch
                 jax.block_until_ready(             # pallint: disable=PL102
-                    (self.dev_coords, self.dev_tile_mbrs, self.dev_mbrs))
+                    (self.dev_coords, self.dev_tile_mbrs, self.dev_mbrs,
+                     self.dev_ids))
 
         def _count_trace():
             self.trace_count += 1
@@ -210,6 +250,21 @@ class SubtreeEngine:
                 (self.dev_coords, self.dev_tile_mbrs, self.dev_mbrs),
                 queries, self.batch_size, self._rep_sh,
             )
+
+    # ---- query-kind surface (QueryKindMixin) -----------------------------
+    def _kind_operands(self):
+        return (self.dev_coords, self.dev_ids, self.dev_tile_mbrs,
+                self.dev_mbrs)
+
+    @property
+    def placed_rects(self) -> np.ndarray:
+        """(N, 4) host copy of the placed subtree rects in device order."""
+        return self.layout.rects.reshape(-1, 4)
+
+    @property
+    def placed_ids(self) -> np.ndarray:
+        """(N,) source IDs aligned with :attr:`placed_rects` (-1 padding)."""
+        return self.layout.rect_ids.reshape(-1)
 
     def transfer_stats(self, num_queries: int) -> dict[str, int]:
         """The paper observed "repeated subtree transfers and per-DPU data

@@ -68,6 +68,12 @@ class SerializedRTree:
     leaf_mbrs: Any     # (L, 4) int32
     leaf_counts: Any   # (L,) int32 — valid rects per leaf
     leaf_rects: Any    # (L, B, 4) int32, padded with EMPTY_RECT
+    # Source IDs of the packed rects: leaf_ids[j, s] is the index of
+    # leaf_rects[j, s] in the *input* rect array of the build (-1 for EMPTY
+    # padding slots).  Result materialization (repro.query) returns these, so
+    # IDs survive the STR permutation.  None on hand-built trees: consumers
+    # fall back to BFS-packed positional IDs.
+    leaf_ids: Any = None   # (L, B) int32 or None
 
     def tree_flatten(self):
         children = (
@@ -78,6 +84,7 @@ class SerializedRTree:
             self.leaf_mbrs,
             self.leaf_counts,
             self.leaf_rects,
+            self.leaf_ids,
         )
         return children, None
 
@@ -103,10 +110,19 @@ class SerializedRTree:
         return int(np.asarray(self.leaf_counts).sum())
 
     def total_bytes(self) -> int:
-        """Serialized size — used by the communication-volume model."""
+        """Serialized size — used by the communication-volume model.
+
+        ``leaf_ids`` is excluded: the paper's SN records carry no source-ID
+        column, and the communication model tracks the index broadcast only
+        (IDs are scattered once with the leaf payload by the query
+        subsystem and accounted there)."""
         return sum(
             int(np.asarray(x).size) * 4
-            for x in jax.tree_util.tree_leaves(self)
+            for x in (
+                self.root_mbr, self.l1_mbrs, self.l1_child_start,
+                self.l1_child_count, self.leaf_mbrs, self.leaf_counts,
+                self.leaf_rects,
+            )
         )
 
     def header_bytes(self) -> int:

@@ -1,0 +1,148 @@
+"""Pallas TPU kernel for on-fabric range-query aggregates (repro.query).
+
+PIMDAL's argument (PAPERS.md) applied to this engine: when the consumer
+wants a *statistic* of the matching rects, shipping candidate lists to the
+host wastes the fabric — reduce inside the kernel and combine partial
+aggregates across devices with ``psum``/``pmin``/``pmax`` instead.  One grid
+walk produces, per query:
+
+* ``count``     — int32 match count (exact, same predicate as the count
+                  kernels including the fused Phase-1 cover gate);
+* ``sums``      — float32 partial sums ``[Σ(x0+x1), Σ(y0+y1), Σ area]``
+                  over matching rects.  Downstream: centroid =
+                  ``(Σ(x0+x1), Σ(y0+y1)) / (2·count)``, mean area =
+                  ``Σ area / count``;
+* ``bbox``      — int32 ``[xmin, ymin, xmax, ymax]`` of the matching rects
+                  (EMPTY orientation when nothing matches, exactly like the
+                  placement-time MBR reductions).
+
+Count and bbox are exact int32.  The float32 sums accumulate in rect-tile
+order, which differs from the XLA twin's single-shot reduction and from a
+float64 host reference — aggregate results are therefore specified to a
+documented tolerance (DESIGN.md Sec 14), not bit-equality.
+
+Grid: ``(num_query_tiles, num_rect_tiles)``, rect axis as reduction axis,
+same pruning as the fused count kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.rect_intersect import (
+    DEFAULT_TQ, DEFAULT_TR, _phase1_query_mask, _tile_hits_any_cover,
+    _tile_overlap)
+from repro.kernels.materialize import _pairwise_hits
+
+_INT32_MAX = 2**31 - 1
+_INT32_MIN = -(2**31)
+
+
+def _aggregate_kernel(q_ref, r_ref, qmbr_ref, rmbr_ref, cover_ref,
+                      cnt_ref, sum_ref, bbox_ref):
+    """One (query-tile, rect-tile) grid step of the aggregate reduction.
+
+    q_ref    : (4, TQ) int32 — query rect coordinates
+    r_ref    : (4, TR) int32 — placed rect coordinates
+    qmbr_ref : (1, 4) int32 — this query tile's MBR
+    rmbr_ref : (1, 4) int32 — this rect tile's MBR
+    cover_ref: (K, 4) int32 — covering L1 MBRs (fused Phase-1)
+    cnt_ref  : (1, TQ) i32 out — match counts
+    sum_ref  : (3, TQ) f32 out — [Σ(x0+x1), Σ(y0+y1), Σ area]
+    bbox_ref : (4, TQ) i32 out — match bbox, EMPTY orientation when empty
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        tq = bbox_ref.shape[1]
+        bbox_ref[...] = jnp.concatenate([
+            jnp.full((2, tq), _INT32_MAX, jnp.int32),
+            jnp.full((2, tq), _INT32_MIN, jnp.int32),
+        ], axis=0)
+
+    cover = cover_ref[...]
+    qmbr = qmbr_ref[0]
+    prune_ok = _tile_overlap(qmbr, rmbr_ref[0]) & _tile_hits_any_cover(
+        qmbr, cover)
+
+    @pl.when(prune_ok)
+    def _compute():
+        hit = _pairwise_hits(q_ref, r_ref)
+        hit = hit & (_phase1_query_mask(q_ref, cover) > 0)[:, None]
+        rx0 = r_ref[0, :][None, :].astype(jnp.float32)
+        ry0 = r_ref[1, :][None, :].astype(jnp.float32)
+        rx1 = r_ref[2, :][None, :].astype(jnp.float32)
+        ry1 = r_ref[3, :][None, :].astype(jnp.float32)
+        zero = jnp.float32(0.0)
+        sum_cx = jnp.sum(jnp.where(hit, rx0 + rx1, zero), axis=1)
+        sum_cy = jnp.sum(jnp.where(hit, ry0 + ry1, zero), axis=1)
+        area = (rx1 - rx0) * (ry1 - ry0)
+        sum_area = jnp.sum(jnp.where(hit, area, zero), axis=1)
+        cnt_ref[0, :] += jnp.sum(hit.astype(jnp.int32), axis=1)
+        sum_ref[...] += jnp.stack([sum_cx, sum_cy, sum_area], axis=0)
+        ri = r_ref[...]
+        xmin = jnp.min(jnp.where(hit, ri[0, :][None, :], _INT32_MAX), axis=1)
+        ymin = jnp.min(jnp.where(hit, ri[1, :][None, :], _INT32_MAX), axis=1)
+        xmax = jnp.max(jnp.where(hit, ri[2, :][None, :], _INT32_MIN), axis=1)
+        ymax = jnp.max(jnp.where(hit, ri[3, :][None, :], _INT32_MIN), axis=1)
+        bbox_ref[...] = jnp.stack([
+            jnp.minimum(bbox_ref[0, :], xmin),
+            jnp.minimum(bbox_ref[1, :], ymin),
+            jnp.maximum(bbox_ref[2, :], xmax),
+            jnp.maximum(bbox_ref[3, :], ymax),
+        ], axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tq", "tr", "interpret")
+)
+def aggregate_tiled(
+    q_coords: jnp.ndarray,     # (4, Qp) int32, Qp % tq == 0
+    r_coords: jnp.ndarray,     # (4, Rp) int32, Rp % tr == 0
+    q_tile_mbrs: jnp.ndarray,  # (Qp // tq, 4) int32
+    r_tile_mbrs: jnp.ndarray,  # (Rp // tr, 4) int32
+    cover_mbrs: jnp.ndarray,   # (K, 4) int32, EMPTY-padded
+    *,
+    tq: int = DEFAULT_TQ,
+    tr: int = DEFAULT_TR,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """On-fabric aggregates per query.
+
+    Returns ``(counts (Qp,) i32, sums (3, Qp) f32, bbox (4, Qp) i32)`` —
+    per-device partials, combined across devices with psum (counts, sums)
+    and pmin/pmax (bbox) by the query pipeline.
+    """
+    qp, rp = q_coords.shape[1], r_coords.shape[1]
+    assert qp % tq == 0 and rp % tr == 0, (qp, tq, rp, tr)
+    nq, nr = qp // tq, rp // tr
+    k = cover_mbrs.shape[0]
+    counts, sums, bbox = pl.pallas_call(
+        _aggregate_kernel,
+        grid=(nq, nr),
+        in_specs=[
+            pl.BlockSpec((4, tq), lambda i, j: (0, i)),
+            pl.BlockSpec((4, tr), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((k, 4), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq), lambda i, j: (0, i)),
+            pl.BlockSpec((3, tq), lambda i, j: (0, i)),
+            pl.BlockSpec((4, tq), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, qp), jnp.int32),
+            jax.ShapeDtypeStruct((3, qp), jnp.float32),
+            jax.ShapeDtypeStruct((4, qp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_coords, r_coords, q_tile_mbrs, r_tile_mbrs, cover_mbrs)
+    return counts[0], sums, bbox

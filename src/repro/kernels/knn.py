@@ -1,0 +1,179 @@
+"""Pallas TPU kNN kernel with tile-MBR min-distance pruning (repro.query).
+
+Metric: **squared point-to-rect distance in float32**.  Coordinates are
+int32 (the paper's fixed-precision grid); the closest point of a rect to a
+query point is obtained with an exact int32 clip, and only the final
+subtraction/multiply/add run in float32:
+
+    cx = clip(px, rx0, rx1)          # exact int32
+    d2 = (f32(px) - f32(cx))^2 + (f32(py) - f32(cy))^2
+
+Every implementation of the metric — this kernel, the XLA twin in
+``repro.kernels.ops``, and the NumPy oracle in ``repro.query.oracle`` —
+performs the *same* float32 operations in the same order, so results are
+bit-equal by IEEE-754 determinism: "NumPy-oracle-exact" holds even though
+the metric itself rounds (f32 conversion of |coord| > 2^24 loses low bits,
+identically everywhere).
+
+Ties are broken by ascending source ID: candidates are ordered by the
+lexicographic key ``(d2, id)`` via a two-key ``jax.lax.sort``.  Absent
+candidates carry ``(inf, INT32_MAX)`` so they sort last; the pipeline maps
+the ``INT32_MAX`` sentinel to ``-1`` after the cross-device merge.
+
+Pruning: a rect tile whose MBR min-distance to the query-tile bbox exceeds
+every query's current k-th distance cannot contribute and is skipped.  The
+bound is computed in float32 from a different expression than the per-point
+metric, so it is deflated by ``_PRUNE_MARGIN`` (a ~10 ulp guard band, far
+wider than the <=4 ulp relative error of either float32 chain) — pruning can
+only drop tiles *strictly* outside the current frontier and never changes
+results.  State (the running (TQ, k) frontier) lives in the output blocks,
+which Pallas revisits for every j at the same i.
+
+Grid: ``(num_query_tiles, num_rect_tiles)``, rect axis innermost so the
+frontier tightens monotonically as tiles stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TQ = 256
+DEFAULT_TR = 512
+
+_INT32_MAX = 2**31 - 1
+
+# Deflates the f32 tile min-distance bound before comparing against the f32
+# frontier: both chains carry <= ~4 ulp (~5e-7 relative) error, so a 1e-5
+# relative guard band keeps pruning strictly conservative.
+_PRUNE_MARGIN = 1.0 - 1e-5
+
+
+def _pairwise_dist2(p_ref, r_ref):
+    """Squared f32 point-to-rect distances of one (point-tile, rect-tile).
+
+    p_ref : (2, TQ) int32 point coordinates
+    r_ref : (4, TR) int32 rect coordinates
+    Returns ``(d2 (TQ, TR) float32, valid (1, TR) bool)``; d2 is garbage on
+    invalid (EMPTY sentinel) rects — mask with ``valid``.
+    """
+    px = p_ref[0, :][:, None]
+    py = p_ref[1, :][:, None]
+    rx0 = r_ref[0, :][None, :]
+    ry0 = r_ref[1, :][None, :]
+    rx1 = r_ref[2, :][None, :]
+    ry1 = r_ref[3, :][None, :]
+    valid = (rx0 <= rx1) & (ry0 <= ry1)
+    cx = jnp.clip(px, rx0, rx1)          # exact int32, no overflow
+    cy = jnp.clip(py, ry0, ry1)
+    dx = px.astype(jnp.float32) - cx.astype(jnp.float32)
+    dy = py.astype(jnp.float32) - cy.astype(jnp.float32)
+    # max(sq, 0) is the identity on squares but is a contraction barrier:
+    # without it LLVM fuses mul+add into an FMA inside the XLA:CPU loop
+    # fusion (invisible in HLO; optimization_barrier does not stop it),
+    # which skips one rounding and breaks bit-equality with the NumPy
+    # oracle whenever dx*dx > 2**24.  The NaN-strict maximum cannot be
+    # folded away, so both products round separately, exactly like NumPy.
+    zero = jnp.float32(0.0)
+    return jnp.maximum(dx * dx, zero) + jnp.maximum(dy * dy, zero), valid
+
+
+def _tile_min_dist2(qbox, rmbr):
+    """Conservative f32 lower bound on d2 between two boxes of shape (4,)."""
+    zero = jnp.float32(0.0)
+    dx = jnp.maximum(
+        jnp.maximum(rmbr[0].astype(jnp.float32) - qbox[2].astype(jnp.float32),
+                    qbox[0].astype(jnp.float32) - rmbr[2].astype(jnp.float32)),
+        zero)
+    dy = jnp.maximum(
+        jnp.maximum(rmbr[1].astype(jnp.float32) - qbox[3].astype(jnp.float32),
+                    qbox[1].astype(jnp.float32) - rmbr[3].astype(jnp.float32)),
+        zero)
+    return dx * dx + dy * dy
+
+
+def _knn_kernel(p_ref, r_ref, id_ref, qmbr_ref, rmbr_ref, dist_ref, idx_ref):
+    """One (point-tile, rect-tile) grid step of the running top-k merge.
+
+    p_ref    : (2, TQ) int32 — query point coordinates
+    r_ref    : (4, TR) int32 — placed rect coordinates
+    id_ref   : (1, TR) int32 — source IDs (-1 on padding slots)
+    qmbr_ref : (1, 4) int32 — bbox of this point tile
+    rmbr_ref : (1, 4) int32 — MBR of this rect tile
+    dist_ref : (TQ, k) f32 out — running k smallest d2 (ascending)
+    idx_ref  : (TQ, k) i32 out — their source IDs (INT32_MAX = empty)
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dist_ref[...] = jnp.full_like(dist_ref, jnp.inf)
+        idx_ref[...] = jnp.full_like(idx_ref, _INT32_MAX)
+
+    rmbr = rmbr_ref[0]
+    tile_valid = (rmbr[0] <= rmbr[2]) & (rmbr[1] <= rmbr[3])
+    kth_max = jnp.max(dist_ref[:, dist_ref.shape[1] - 1])
+    mind2 = _tile_min_dist2(qmbr_ref[0], rmbr)
+    prune_ok = tile_valid & (mind2 * _PRUNE_MARGIN <= kth_max)
+
+    @pl.when(prune_ok)
+    def _compute():
+        k = dist_ref.shape[1]
+        d2, valid = _pairwise_dist2(p_ref, r_ref)
+        d2 = jnp.where(valid, d2, jnp.inf)
+        cand_ids = jnp.where(valid, id_ref[...], _INT32_MAX)      # (1, TR)
+        idm = jnp.broadcast_to(cand_ids, d2.shape).astype(jnp.int32)
+        dcat = jnp.concatenate([dist_ref[...], d2], axis=1)
+        icat = jnp.concatenate([idx_ref[...], idm], axis=1)
+        ds, ids = jax.lax.sort((dcat, icat), dimension=1, num_keys=2)
+        dist_ref[...] = ds[:, :k]
+        idx_ref[...] = ids[:, :k]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tq", "tr", "interpret")
+)
+def knn_tiled(
+    p_coords: jnp.ndarray,     # (2, Qp) int32, Qp % tq == 0
+    r_coords: jnp.ndarray,     # (4, Rp) int32, Rp % tr == 0
+    r_ids: jnp.ndarray,        # (Rp,) int32 source IDs
+    q_tile_mbrs: jnp.ndarray,  # (Qp // tq, 4) int32 point-tile bboxes
+    r_tile_mbrs: jnp.ndarray,  # (Rp // tr, 4) int32
+    *,
+    k: int,
+    tq: int = DEFAULT_TQ,
+    tr: int = DEFAULT_TR,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """k nearest rects per query point.
+
+    Returns ``(dists (Qp, k) f32 ascending, ids (Qp, k) i32)``; slots past
+    the number of available rects hold ``(inf, INT32_MAX)`` — callers map
+    the sentinel to -1 after any cross-device merge.
+    """
+    qp, rp = p_coords.shape[1], r_coords.shape[1]
+    assert qp % tq == 0 and rp % tr == 0, (qp, tq, rp, tr)
+    nq, nr = qp // tq, rp // tr
+    dists, ids = pl.pallas_call(
+        _knn_kernel,
+        grid=(nq, nr),
+        in_specs=[
+            pl.BlockSpec((2, tq), lambda i, j: (0, i)),
+            pl.BlockSpec((4, tr), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tr), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((qp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(p_coords, r_coords, r_ids[None, :], q_tile_mbrs, r_tile_mbrs)
+    return dists, ids

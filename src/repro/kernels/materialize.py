@@ -1,0 +1,262 @@
+"""Pallas TPU kernels for result-ID materialization (repro.query pass 2).
+
+The count kernels (:mod:`repro.kernels.rect_intersect`) answer "how many
+rects match"; these kernels answer "*which* rects match" without ever
+shipping a ``(Q, R)`` candidate mask to the host (pallint PL113).  The
+two-pass dataflow (DESIGN.md Sec 14):
+
+pass 1   the existing fused count kernel → per-device per-query counts;
+offsets  an exclusive prefix over the per-device counts (computed in the
+         shard_map body from an on-fabric gather) gives each device the
+         *global* slot range its matches occupy for every query;
+pass 2   the scatter kernels below walk the same (query-tile × rect-tile)
+         grid and write each match's source ID into a fixed-shape
+         ``(Q, Kcap)`` slot buffer at ``base + running_local_rank``.
+
+Slot encoding: IDs are written *plus one* into a zero-initialized buffer, so
+a cross-device ``psum`` merges the disjoint per-device slot writes (zeros
+elsewhere are the identity); the pipeline subtracts 1 afterwards, leaving
+``-1`` in empty slots.  Matches are therefore returned in ascending placed
+order — deterministic and device-count-invariant for a fixed layout.
+
+Overflow: a match whose global slot is ``>= Kcap`` is dropped at the write
+(saturation); the per-query total from pass 1 still counts it, so the
+pipeline reports ``overflow = max(total - Kcap, 0)`` per query.
+
+The radius variant replaces the rect-overlap predicate with a squared
+point-to-rect distance test (closed ball, float32 — see
+:func:`repro.kernels.knn.point_rect_dist2` for the exactness argument).
+
+Grid: ``(num_query_tiles, num_rect_tiles)`` with the rect axis as the
+reduction axis, like the count kernels; the running per-query hit count is
+carried in the counts output block between rect-tile steps.  Default tiles
+are smaller than the count kernels' because the scatter builds a
+(TQ, TR, Kcap) one-hot intermediate in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.rect_intersect import (
+    _pairwise_counts, _phase1_query_mask, _tile_hits_any_cover, _tile_overlap)
+from repro.kernels.knn import (
+    _pairwise_dist2, _tile_min_dist2, _PRUNE_MARGIN)
+
+# (TQ, TR, Kcap) int32 one-hot working set: 128 * 256 * 64 * 4 B = 8 MB.
+DEFAULT_TQ = 128
+DEFAULT_TR = 256
+DEFAULT_KCAP = 64
+
+
+def _pairwise_hits(q_ref, r_ref):
+    """(TQ, TR) bool overlap matrix of one (query-tile, rect-tile) pair."""
+    qx0 = q_ref[0, :][:, None]
+    qy0 = q_ref[1, :][:, None]
+    qx1 = q_ref[2, :][:, None]
+    qy1 = q_ref[3, :][:, None]
+    rx0 = r_ref[0, :][None, :]
+    ry0 = r_ref[1, :][None, :]
+    rx1 = r_ref[2, :][None, :]
+    ry1 = r_ref[3, :][None, :]
+    return (qx0 <= rx1) & (rx0 <= qx1) & (qy0 <= ry1) & (ry0 <= qy1)
+
+
+def _scatter_tile(hit, ids_plus1, pos, kcap):
+    """Scatter one tile's matches into their (TQ, Kcap) slot contribution.
+
+    hit       : (TQ, TR) bool — matches in this tile
+    ids_plus1 : (1, TR) int32 — source IDs + 1 (0 is the empty sentinel)
+    pos       : (TQ, TR) int32 — global slot index of each match
+    Writes saturate at ``kcap``: slots beyond the cap are dropped here and
+    surface as per-query overflow in the pipeline.
+    """
+    tq = hit.shape[0]
+    write = hit & (pos >= 0) & (pos < kcap)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (tq, kcap), 1)
+    onehot = (pos[:, :, None] == iota_k[:, None, :]) & write[:, :, None]
+    return jnp.sum(
+        onehot.astype(jnp.int32) * ids_plus1[0, :][None, :, None], axis=1)
+
+
+def _scatter_ids_kernel(q_ref, r_ref, id_ref, qmbr_ref, rmbr_ref, cover_ref,
+                        base_ref, slot_ref, cnt_ref):
+    """Range-query ID scatter grid step.
+
+    q_ref    : (4, TQ) int32 — query rect coordinates
+    r_ref    : (4, TR) int32 — placed rect coordinates
+    id_ref   : (1, TR) int32 — source IDs of the placed rects (-1 padding)
+    qmbr_ref : (1, 4) int32 — this query tile's MBR
+    rmbr_ref : (1, 4) int32 — this rect tile's MBR (placement-time cache)
+    cover_ref: (K, 4) int32 — covering L1 MBRs (fused Phase-1)
+    base_ref : (1, TQ) int32 — per-query global slot offset of this device
+    slot_ref : (TQ, Kcap) int32 out — IDs + 1, 0 = empty (psum-mergeable)
+    cnt_ref  : (1, TQ) int32 out — running local match count (the carry)
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        slot_ref[...] = jnp.zeros_like(slot_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    cover = cover_ref[...]
+    qmbr = qmbr_ref[0]
+    prune_ok = _tile_overlap(qmbr, rmbr_ref[0]) & _tile_hits_any_cover(
+        qmbr, cover)
+
+    @pl.when(prune_ok)
+    def _compute():
+        kcap = slot_ref.shape[1]
+        hit = _pairwise_hits(q_ref, r_ref)
+        hit = hit & (_phase1_query_mask(q_ref, cover) > 0)[:, None]
+        prior = cnt_ref[0, :]
+        excl = jnp.cumsum(hit.astype(jnp.int32), axis=1) - hit.astype(
+            jnp.int32)
+        pos = base_ref[0, :][:, None] + prior[:, None] + excl
+        slot_ref[...] += _scatter_tile(hit, id_ref[...] + 1, pos, kcap)
+        cnt_ref[0, :] += jnp.sum(hit.astype(jnp.int32), axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kcap", "tq", "tr", "interpret")
+)
+def materialize_ids_tiled(
+    q_coords: jnp.ndarray,     # (4, Qp) int32, Qp % tq == 0
+    r_coords: jnp.ndarray,     # (4, Rp) int32, Rp % tr == 0
+    r_ids: jnp.ndarray,        # (Rp,) int32 source IDs, -1 padding
+    q_tile_mbrs: jnp.ndarray,  # (Qp // tq, 4) int32
+    r_tile_mbrs: jnp.ndarray,  # (Rp // tr, 4) int32
+    cover_mbrs: jnp.ndarray,   # (K, 4) int32, EMPTY-padded
+    base: jnp.ndarray,         # (Qp,) int32 per-query global slot offsets
+    *,
+    kcap: int = DEFAULT_KCAP,
+    tq: int = DEFAULT_TQ,
+    tr: int = DEFAULT_TR,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pass-2 ID scatter.  Returns ``(slots_plus1 (Qp, kcap), counts (Qp,))``.
+
+    ``slots_plus1`` holds source IDs + 1 at their global slots (0 = empty)
+    so the pipeline can psum-merge devices before subtracting 1.
+    """
+    qp, rp = q_coords.shape[1], r_coords.shape[1]
+    assert qp % tq == 0 and rp % tr == 0, (qp, tq, rp, tr)
+    nq, nr = qp // tq, rp // tr
+    k = cover_mbrs.shape[0]
+    slots, counts = pl.pallas_call(
+        _scatter_ids_kernel,
+        grid=(nq, nr),
+        in_specs=[
+            pl.BlockSpec((4, tq), lambda i, j: (0, i)),
+            pl.BlockSpec((4, tr), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tr), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((k, 4), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, tq), lambda i, j: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, kcap), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tq), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, kcap), jnp.int32),
+            jax.ShapeDtypeStruct((1, qp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_coords, r_coords, r_ids[None, :], q_tile_mbrs, r_tile_mbrs,
+      cover_mbrs, base[None, :])
+    return slots, counts[0]
+
+
+def _scatter_radius_kernel(p_ref, rad_ref, r_ref, id_ref, qmbr_ref, rmbr_ref,
+                           base_ref, slot_ref, cnt_ref):
+    """Radius-query ID scatter grid step (closed ball, squared f32 metric).
+
+    p_ref    : (2, TQ) int32 — query point coordinates
+    rad_ref  : (1, TQ) int32 — per-query radii (< 0 marks padding slots)
+    qmbr_ref : (1, 4) int32 — bbox of this point tile
+    Other refs as in :func:`_scatter_ids_kernel`; no cover operand — the
+    L1 covers encode the *overlap* filter, which does not bound distance.
+    Tile pruning compares the tile min-distance against the tile's largest
+    radius with the conservative f32 margin from :mod:`repro.kernels.knn`.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        slot_ref[...] = jnp.zeros_like(slot_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    rmbr = rmbr_ref[0]
+    rad = rad_ref[0, :]
+    maxr = jnp.max(rad)
+    maxr2 = maxr.astype(jnp.float32) * maxr.astype(jnp.float32)
+    mind2 = _tile_min_dist2(qmbr_ref[0], rmbr)
+    tile_valid = rmbr[0] <= rmbr[2]
+    prune_ok = tile_valid & (maxr >= 0) & (mind2 * _PRUNE_MARGIN <= maxr2)
+
+    @pl.when(prune_ok)
+    def _compute():
+        kcap = slot_ref.shape[1]
+        d2, valid = _pairwise_dist2(p_ref, r_ref)
+        r2 = rad.astype(jnp.float32) * rad.astype(jnp.float32)
+        hit = valid & (rad >= 0)[:, None] & (d2 <= r2[:, None])
+        prior = cnt_ref[0, :]
+        excl = jnp.cumsum(hit.astype(jnp.int32), axis=1) - hit.astype(
+            jnp.int32)
+        pos = base_ref[0, :][:, None] + prior[:, None] + excl
+        slot_ref[...] += _scatter_tile(hit, id_ref[...] + 1, pos, kcap)
+        cnt_ref[0, :] += jnp.sum(hit.astype(jnp.int32), axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kcap", "tq", "tr", "interpret")
+)
+def materialize_radius_tiled(
+    p_coords: jnp.ndarray,     # (2, Qp) int32 point coordinates
+    radii: jnp.ndarray,        # (Qp,) int32, < 0 marks padding
+    r_coords: jnp.ndarray,     # (4, Rp) int32
+    r_ids: jnp.ndarray,        # (Rp,) int32 source IDs
+    q_tile_mbrs: jnp.ndarray,  # (Qp // tq, 4) int32 point-tile bboxes
+    r_tile_mbrs: jnp.ndarray,  # (Rp // tr, 4) int32
+    base: jnp.ndarray,         # (Qp,) int32 global slot offsets
+    *,
+    kcap: int = DEFAULT_KCAP,
+    tq: int = DEFAULT_TQ,
+    tr: int = DEFAULT_TR,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Radius-query pass-2 scatter.  Same contract as
+    :func:`materialize_ids_tiled` with the ball predicate."""
+    qp, rp = p_coords.shape[1], r_coords.shape[1]
+    assert qp % tq == 0 and rp % tr == 0, (qp, tq, rp, tr)
+    nq, nr = qp // tq, rp // tr
+    slots, counts = pl.pallas_call(
+        _scatter_radius_kernel,
+        grid=(nq, nr),
+        in_specs=[
+            pl.BlockSpec((2, tq), lambda i, j: (0, i)),
+            pl.BlockSpec((1, tq), lambda i, j: (0, i)),
+            pl.BlockSpec((4, tr), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tr), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, tq), lambda i, j: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, kcap), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tq), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, kcap), jnp.int32),
+            jax.ShapeDtypeStruct((1, qp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(p_coords, radii[None, :], r_coords, r_ids[None, :], q_tile_mbrs,
+      r_tile_mbrs, base[None, :])
+    return slots, counts[0]

@@ -32,6 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import aggregate as ka
+from repro.kernels import knn as kk
+from repro.kernels import materialize as km
 from repro.kernels import rect_intersect as rk
 from repro.kernels import ref
 
@@ -252,6 +255,332 @@ def build_active_tiles_device(
     keep = jax.lax.broadcasted_iota(jnp.int32, (nq, nr), 1) < nactive[:, None]
     tile_ids = jnp.where(keep, order, 0)
     return nactive, tile_ids
+
+
+# ---------------------------------------------------------------------------
+# Query-surface dispatchers (repro.query): ID materialization, kNN, radius,
+# aggregates.  Same shape as overlap_counts_fused — the rect side arrives
+# placement-cached, only the query side is tiled here — with ``impl`` picking
+# the Pallas kernel or the pure-jnp XLA twin.  ``impl="sparse"`` has no
+# scalar-prefetch variant for these kinds and routes to the dense Pallas
+# kernel.  The XLA twins chunk their (C, R) intermediates over queries; the
+# intermediates stay on device (pallint PL113 bans host materialization).
+# ---------------------------------------------------------------------------
+
+_XLA_CHUNK = 256
+
+
+def _point_tile_mbrs(points: jnp.ndarray, tq: int) -> jnp.ndarray:
+    """Per-tile bboxes of a padded (2, Qp) point batch (as degenerate rects).
+
+    Padding columns are zeros; they only widen the tile bbox toward the
+    origin, which weakens distance pruning but never changes results.
+    """
+    prects = jnp.concatenate([points.T, points.T], axis=1)   # (Qp, 4)
+    return tile_mbrs(prects, tq)
+
+
+def _pad_points(points: jnp.ndarray, tq: int) -> jnp.ndarray:
+    """EMPTY-analog padding for (Q, 2) point batches (zeros; results for
+    padded rows are sliced off by the caller)."""
+    q = points.shape[0]
+    pad = (-q) % tq
+    if pad == 0:
+        return points
+    return jnp.concatenate(
+        [points, jnp.zeros((pad, 2), points.dtype)], axis=0)
+
+
+def _xla_dist2(points: jnp.ndarray, rects: jnp.ndarray):
+    """(C, R) squared f32 point-to-rect distances + validity — the XLA twin
+    of :func:`repro.kernels.knn._pairwise_dist2` (same f32 op order)."""
+    px = points[:, 0:1]
+    py = points[:, 1:2]
+    rx0 = rects[:, 0][None, :]
+    ry0 = rects[:, 1][None, :]
+    rx1 = rects[:, 2][None, :]
+    ry1 = rects[:, 3][None, :]
+    valid = (rx0 <= rx1) & (ry0 <= ry1)
+    cx = jnp.clip(px, rx0, rx1)
+    cy = jnp.clip(py, ry0, ry1)
+    dx = px.astype(jnp.float32) - cx.astype(jnp.float32)
+    dy = py.astype(jnp.float32) - cy.astype(jnp.float32)
+    # same contraction barrier as _pairwise_dist2 (see knn.py): keeps
+    # LLVM from FMA-fusing mul+add, so products round like NumPy's
+    zero = jnp.float32(0.0)
+    return jnp.maximum(dx * dx, zero) + jnp.maximum(dy * dy, zero), valid
+
+
+def _xla_scatter_slots(hit: jnp.ndarray, r_ids: jnp.ndarray,
+                       base: jnp.ndarray, kcap: int):
+    """Left-pack matching IDs into global (C, kcap) slots, XLA-side.
+
+    The first ``kcap`` matches per query (ascending placed order — a stable
+    argsort pulls hit columns forward) land at slots ``base + local_rank``;
+    slots >= kcap saturate.  Returns (slots_plus1, counts) matching the
+    Pallas scatter kernels' contract.
+    """
+    c, nr = hit.shape
+    counts = jnp.sum(hit, axis=1, dtype=jnp.int32)
+    order = jnp.argsort(
+        jnp.logical_not(hit).astype(jnp.int32), axis=1, stable=True
+    ).astype(jnp.int32)
+    width = min(kcap, nr)
+    ordk = order[:, :width]
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (c, width), 1)
+    cand = jnp.where(iota_w < counts[:, None], r_ids[ordk] + 1, 0)
+    if width < kcap:
+        cand = jnp.pad(cand, ((0, 0), (0, kcap - width)))
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (c, kcap), 1)
+    src = iota_k - base[:, None]
+    in_range = (src >= 0) & (src < kcap)
+    slots = jnp.where(
+        in_range, jnp.take_along_axis(cand, jnp.clip(src, 0, kcap - 1),
+                                      axis=1), 0)
+    return slots, counts
+
+
+def _scan_query_chunks(body, per_query_operands, q):
+    """Run ``body(chunk_operands...)`` over fixed-size query chunks.
+
+    Each operand is (Q, ...) and is zero-padded to a chunk multiple; body
+    returns a pytree of (C, ...) leaves which are restacked to (Q, ...).
+    """
+    chunk = min(_XLA_CHUNK, max(q, 1))
+    pad = (-q) % chunk
+    padded = [
+        jnp.pad(op, ((0, pad),) + ((0, 0),) * (op.ndim - 1))
+        for op in per_query_operands
+    ]
+    stacked = [p.reshape((-1, chunk) + p.shape[1:]) for p in padded]
+
+    def step(carry, ops_c):
+        return carry, body(*ops_c)
+
+    _, out = jax.lax.scan(step, None, tuple(stacked))
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((-1,) + x.shape[2:])[:q], out)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kcap", "tq", "tr", "impl")
+)
+def materialize_ids_fused(
+    queries: jnp.ndarray,       # (Q, 4) int32 query batch
+    r_coords: jnp.ndarray,      # (4, Rp) int32 placement-time transpose
+    r_ids: jnp.ndarray,         # (Rp,) int32 source IDs (-1 padding)
+    r_tile_mbrs: jnp.ndarray,   # (Rp // tr, 4) int32
+    cover_mbrs: jnp.ndarray,    # (K, 4) int32, EMPTY-padded
+    base: jnp.ndarray,          # (Q,) int32 per-query global slot offsets
+    *,
+    kcap: int = km.DEFAULT_KCAP,
+    tq: int = km.DEFAULT_TQ,
+    tr: int = km.DEFAULT_TR,
+    impl: str = DEFAULT_IMPL,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pass-2 range-query ID scatter.  Returns ``(slots_plus1 (Q, kcap),
+    counts (Q,))`` — see :func:`repro.kernels.materialize.
+    materialize_ids_tiled` for the slot encoding."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    q = queries.shape[0]
+    if q == 0:
+        return (jnp.zeros((0, kcap), jnp.int32), jnp.zeros((0,), jnp.int32))
+    if impl == "xla":
+        with jax.named_scope("materialize_ids_xla"):
+            rects = r_coords.T
+
+            def body(qc, bc):
+                hit = ref.rect_overlap(qc[:, None, :], rects[None, :, :])
+                mask = ref.rect_overlap(
+                    qc[:, None, :], cover_mbrs[None, :, :]).any(axis=1)
+                return _xla_scatter_slots(hit & mask[:, None], r_ids, bc,
+                                          kcap)
+            return _scan_query_chunks(body, (queries, base), q)
+    qp = pad_rects_to(queries, tq)
+    basep = jnp.pad(base, (0, qp.shape[0] - q))
+    with jax.named_scope("materialize_ids_tiled"):
+        slots, counts = km.materialize_ids_tiled(
+            qp.T, r_coords, r_ids, tile_mbrs(qp, tq), r_tile_mbrs,
+            cover_mbrs, basep, kcap=kcap, tq=tq, tr=tr,
+            interpret=_INTERPRET,
+        )
+    return slots[:q], counts[:q]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kcap", "tq", "tr", "impl")
+)
+def materialize_radius_fused(
+    points: jnp.ndarray,        # (Q, 2) int32 query points
+    radii: jnp.ndarray,         # (Q,) int32 (< 0 marks padding)
+    r_coords: jnp.ndarray,      # (4, Rp) int32
+    r_ids: jnp.ndarray,         # (Rp,) int32
+    r_tile_mbrs: jnp.ndarray,   # (Rp // tr, 4) int32
+    base: jnp.ndarray,          # (Q,) int32 global slot offsets
+    *,
+    kcap: int = km.DEFAULT_KCAP,
+    tq: int = km.DEFAULT_TQ,
+    tr: int = km.DEFAULT_TR,
+    impl: str = DEFAULT_IMPL,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Radius-query (closed f32 ball) ID scatter; contract as
+    :func:`materialize_ids_fused`."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    q = points.shape[0]
+    if q == 0:
+        return (jnp.zeros((0, kcap), jnp.int32), jnp.zeros((0,), jnp.int32))
+    if impl == "xla":
+        with jax.named_scope("materialize_radius_xla"):
+            rects = r_coords.T
+
+            def body(pc, rc, bc):
+                d2, valid = _xla_dist2(pc, rects)
+                r2 = rc.astype(jnp.float32) * rc.astype(jnp.float32)
+                hit = valid & (rc >= 0)[:, None] & (d2 <= r2[:, None])
+                return _xla_scatter_slots(hit, r_ids, bc, kcap)
+            return _scan_query_chunks(body, (points, radii, base), q)
+    pp = _pad_points(points, tq)
+    radp = jnp.pad(radii, (0, pp.shape[0] - q), constant_values=-1)
+    basep = jnp.pad(base, (0, pp.shape[0] - q))
+    with jax.named_scope("materialize_radius_tiled"):
+        slots, counts = km.materialize_radius_tiled(
+            pp.T, radp, r_coords, r_ids, _point_tile_mbrs(pp.T, tq),
+            r_tile_mbrs, basep, kcap=kcap, tq=tq, tr=tr,
+            interpret=_INTERPRET,
+        )
+    return slots[:q], counts[:q]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tq", "tr", "impl")
+)
+def knn_fused(
+    points: jnp.ndarray,        # (Q, 2) int32 query points
+    r_coords: jnp.ndarray,      # (4, Rp) int32
+    r_ids: jnp.ndarray,         # (Rp,) int32
+    r_tile_mbrs: jnp.ndarray,   # (Rp // tr, 4) int32
+    *,
+    k: int,
+    tq: int = kk.DEFAULT_TQ,
+    tr: int = kk.DEFAULT_TR,
+    impl: str = DEFAULT_IMPL,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-device kNN.  Returns ``(dists (Q, k) f32 ascending, ids (Q, k)
+    i32)`` with the ``INT32_MAX`` empty sentinel (ties broken by source ID;
+    see :mod:`repro.kernels.knn` for the f32-exactness contract)."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    q = points.shape[0]
+    if q == 0:
+        return (jnp.zeros((0, k), jnp.float32), jnp.zeros((0, k), jnp.int32))
+    if impl == "xla":
+        with jax.named_scope("knn_xla"):
+            rects = r_coords.T
+
+            def body(pc):
+                d2, valid = _xla_dist2(pc, rects)
+                d2 = jnp.where(valid, d2, jnp.inf)
+                ids = jnp.where(valid, r_ids[None, :], INT32_MAX)
+                ids = jnp.broadcast_to(ids, d2.shape).astype(jnp.int32)
+                if d2.shape[1] < k:
+                    padw = k - d2.shape[1]
+                    d2 = jnp.pad(d2, ((0, 0), (0, padw)),
+                                 constant_values=jnp.inf)
+                    ids = jnp.pad(ids, ((0, 0), (0, padw)),
+                                  constant_values=INT32_MAX)
+                ds, si = jax.lax.sort((d2, ids), dimension=1, num_keys=2)
+                return ds[:, :k], si[:, :k]
+            return _scan_query_chunks(body, (points,), q)
+    pp = _pad_points(points, tq)
+    with jax.named_scope("knn_tiled"):
+        dists, ids = kk.knn_tiled(
+            pp.T, r_coords, r_ids, _point_tile_mbrs(pp.T, tq), r_tile_mbrs,
+            k=k, tq=tq, tr=tr, interpret=_INTERPRET,
+        )
+    return dists[:q], ids[:q]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tq", "tr", "impl")
+)
+def aggregate_fused(
+    queries: jnp.ndarray,       # (Q, 4) int32 query batch
+    r_coords: jnp.ndarray,      # (4, Rp) int32
+    r_tile_mbrs: jnp.ndarray,   # (Rp // tr, 4) int32
+    cover_mbrs: jnp.ndarray,    # (K, 4) int32, EMPTY-padded
+    *,
+    tq: int = rk.DEFAULT_TQ,
+    tr: int = rk.DEFAULT_TR,
+    impl: str = DEFAULT_IMPL,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """On-fabric per-device aggregate partials: ``(counts (Q,) i32,
+    sums (3, Q) f32 [Σ(x0+x1), Σ(y0+y1), Σ area], bbox (4, Q) i32)``."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    q = queries.shape[0]
+    if q == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((3, 0), jnp.float32),
+                jnp.zeros((4, 0), jnp.int32))
+    if impl == "xla":
+        with jax.named_scope("aggregate_xla"):
+            rects = r_coords.T
+
+            def body(qc):
+                hit = ref.rect_overlap(qc[:, None, :], rects[None, :, :])
+                mask = ref.rect_overlap(
+                    qc[:, None, :], cover_mbrs[None, :, :]).any(axis=1)
+                hit = hit & mask[:, None]
+                rf = rects.astype(jnp.float32)
+                zero = jnp.float32(0.0)
+                sum_cx = jnp.sum(
+                    jnp.where(hit, (rf[:, 0] + rf[:, 2])[None, :], zero),
+                    axis=1)
+                sum_cy = jnp.sum(
+                    jnp.where(hit, (rf[:, 1] + rf[:, 3])[None, :], zero),
+                    axis=1)
+                area = ((rf[:, 2] - rf[:, 0]) * (rf[:, 3] - rf[:, 1]))
+                sum_area = jnp.sum(jnp.where(hit, area[None, :], zero),
+                                   axis=1)
+                cnt = jnp.sum(hit, axis=1, dtype=jnp.int32)
+                xmin = jnp.min(
+                    jnp.where(hit, rects[:, 0][None, :], INT32_MAX), axis=1)
+                ymin = jnp.min(
+                    jnp.where(hit, rects[:, 1][None, :], INT32_MAX), axis=1)
+                xmax = jnp.max(
+                    jnp.where(hit, rects[:, 2][None, :], INT32_MIN), axis=1)
+                ymax = jnp.max(
+                    jnp.where(hit, rects[:, 3][None, :], INT32_MIN), axis=1)
+                return (cnt, jnp.stack([sum_cx, sum_cy, sum_area], axis=0),
+                        jnp.stack([xmin, ymin, xmax, ymax], axis=0))
+            cnt, sums, bbox = _scan_query_chunks_t(body, queries, q)
+            return cnt, sums, bbox
+    qp = pad_rects_to(queries, tq)
+    with jax.named_scope("aggregate_tiled"):
+        counts, sums, bbox = ka.aggregate_tiled(
+            qp.T, r_coords, tile_mbrs(qp, tq), r_tile_mbrs, cover_mbrs,
+            tq=tq, tr=tr, interpret=_INTERPRET,
+        )
+    return counts[:q], sums[:, :q], bbox[:, :q]
+
+
+def _scan_query_chunks_t(body, queries, q):
+    """Like :func:`_scan_query_chunks` for bodies whose outputs carry the
+    query axis *last* (the (3, C) sums / (4, C) bbox layout)."""
+    chunk = min(_XLA_CHUNK, max(q, 1))
+    pad = (-q) % chunk
+    qp = jnp.pad(queries, ((0, pad), (0, 0)))
+
+    def step(carry, qc):
+        return carry, body(qc)
+
+    _, (cnt, sums, bbox) = jax.lax.scan(
+        step, None, qp.reshape(-1, chunk, 4))
+    cnt = cnt.reshape(-1)[:q]
+    sums = jnp.moveaxis(sums, 0, 1).reshape(3, -1)[:, :q]
+    bbox = jnp.moveaxis(bbox, 0, 1).reshape(4, -1)[:, :q]
+    return cnt, sums, bbox
 
 
 def overlap_counts_sparse_host(

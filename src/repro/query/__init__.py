@@ -1,0 +1,16 @@
+"""Result-materializing query surface: ids / knn / radius / aggregate.
+
+Turns the count-only engines into a full query subsystem (DESIGN.md
+Sec 14).  The public pieces:
+
+* :class:`repro.query.result.SpatialResult` — the typed result wrapper
+  every ``query_*`` engine method returns;
+* :mod:`repro.query.pipelines` — the SPMD step factory + payload packing
+  shared by both engines and the serving layer;
+* :mod:`repro.query.oracle` — NumPy ground truth for every kind (also the
+  serving degradation path).
+"""
+from repro.query.result import KINDS, SpatialResult
+from repro.query.pipelines import QUERY_KINDS, make_kind_step
+
+__all__ = ["KINDS", "QUERY_KINDS", "SpatialResult", "make_kind_step"]

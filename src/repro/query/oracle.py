@@ -1,0 +1,160 @@
+"""NumPy reference oracles for the query surface.
+
+Each oracle is the ground truth a kernel path must match — bit-equal for
+integer outputs (counts, IDs, bboxes, distances under the shared f32 metric),
+and within a documented tolerance for the float aggregate sums, which the
+oracle therefore accumulates in float64 (``AGG_RTOL``).
+
+All oracles take the **placed** rect arrays — the per-device slices
+concatenated in device order, exactly the rows the kernels stream, including
+EMPTY padding (``lo > hi``) slots which never match anything — plus the
+aligned source-ID vector (``-1`` on padding).  "Placed order" is the order
+in which materialized IDs come back from the engines, so ``ids_oracle`` /
+``radius_oracle`` outputs compare with ``==``, no sorting slack.
+
+The distance metric is the shared three-step contract of
+:mod:`repro.kernels.knn`: exact int32 clip to the rect, then float32
+subtract/square/add.  :func:`point_rect_dist2` performs those float32
+operations in the same order as the kernel and the XLA twin, so kNN and
+radius results are IEEE-deterministic across all three implementations.
+
+These oracles double as the serving layer's degradation path: when the fast
+path is down, :class:`repro.serve.spatial_serve.SpatialServer` answers
+ids/knn/radius/aggregate requests from here over the host rect copy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+AGG_RTOL = 1e-5   # f32 on-fabric sums vs this float64 oracle
+AGG_ATOL = 1e-6
+
+_INT32_MAX = 2**31 - 1
+_INT32_MIN = -(2**31)
+
+
+def _valid(rects: np.ndarray) -> np.ndarray:
+    r = np.asarray(rects)
+    return (r[:, 0] <= r[:, 2]) & (r[:, 1] <= r[:, 3])
+
+
+def overlap_matrix(queries: np.ndarray, rects: np.ndarray) -> np.ndarray:
+    """(Q, R) bool closed-interval overlap; EMPTY rows never match."""
+    q = np.asarray(queries)
+    r = np.asarray(rects)
+    return (
+        (q[:, None, 0] <= r[None, :, 2]) & (r[None, :, 0] <= q[:, None, 2])
+        & (q[:, None, 1] <= r[None, :, 3]) & (r[None, :, 1] <= q[:, None, 3])
+        & _valid(r)[None, :]
+    )
+
+
+def point_rect_dist2(points: np.ndarray, rects: np.ndarray) -> np.ndarray:
+    """(Q, R) squared f32 point-to-rect distances — the shared metric.
+
+    Same operations, same order, same dtypes as the Pallas kernel and the
+    XLA twin: int32 clip (max then min, matching ``jnp.clip``), then f32
+    subtract / multiply / add.  The device paths wrap each square in
+    ``maximum(.., 0)`` purely as an FMA-contraction barrier (see
+    ``repro.kernels.knn._pairwise_dist2``) so that both products round
+    separately — i.e. so they compute *this* plain NumPy expression
+    bit-exactly.  Rows for invalid (EMPTY) rects are garbage — mask with
+    :func:`_valid` like the kernels do.
+    """
+    p = np.asarray(points, dtype=np.int32)
+    r = np.asarray(rects, dtype=np.int32)
+    px = p[:, 0][:, None]
+    py = p[:, 1][:, None]
+    cx = np.minimum(np.maximum(px, r[:, 0][None, :]), r[:, 2][None, :])
+    cy = np.minimum(np.maximum(py, r[:, 1][None, :]), r[:, 3][None, :])
+    dx = px.astype(np.float32) - cx.astype(np.float32)
+    dy = py.astype(np.float32) - cy.astype(np.float32)
+    return dx * dx + dy * dy
+
+
+def _pack_ids(hit: np.ndarray, ids: np.ndarray, kcap: int
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Shared tail of the materializing oracles: first-kcap IDs per query in
+    placed order, true counts, and overflow."""
+    q = hit.shape[0]
+    counts = hit.sum(axis=1).astype(np.int32)
+    out = np.full((q, kcap), -1, dtype=np.int32)
+    for i in range(q):
+        match = ids[hit[i]]
+        out[i, : min(kcap, match.shape[0])] = match[:kcap]
+    overflow = np.maximum(counts - kcap, 0).astype(np.int32)
+    return out, counts, overflow
+
+
+def ids_oracle(queries: np.ndarray, rects: np.ndarray, ids: np.ndarray,
+               *, kcap: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Range-query materialization: ``(ids (Q, kcap), counts, overflow)``."""
+    return _pack_ids(overlap_matrix(queries, rects),
+                     np.asarray(ids, dtype=np.int32), kcap)
+
+
+def radius_oracle(points: np.ndarray, radii: np.ndarray, rects: np.ndarray,
+                  ids: np.ndarray, *, kcap: int
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Closed-ball radius query under the shared f32 metric (``d2 <= r*r``
+    with the radius squared in float32, exactly like the kernels)."""
+    rad = np.asarray(radii, dtype=np.int32)
+    d2 = point_rect_dist2(points, rects)
+    r2 = rad.astype(np.float32) * rad.astype(np.float32)
+    hit = _valid(rects)[None, :] & (rad >= 0)[:, None] & (d2 <= r2[:, None])
+    return _pack_ids(hit, np.asarray(ids, dtype=np.int32), kcap)
+
+
+def knn_oracle(points: np.ndarray, rects: np.ndarray, ids: np.ndarray,
+               *, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """k nearest rects: ``(dists (Q, k) f32 ascending, ids (Q, k))``.
+
+    Ties broken by ascending source ID via lexsort on ``(d2, id)`` — the
+    same two-key order as the kernels' ``jax.lax.sort``.  Slots past the
+    number of valid rects hold ``(inf, -1)``.
+    """
+    p = np.asarray(points, dtype=np.int32)
+    idv = np.asarray(ids, dtype=np.int32)
+    valid = _valid(rects)
+    d2 = point_rect_dist2(p, rects)
+    q = p.shape[0]
+    out_d = np.full((q, k), np.inf, dtype=np.float32)
+    out_i = np.full((q, k), -1, dtype=np.int32)
+    vd2 = d2[:, valid]
+    vids = idv[valid]
+    for i in range(q):
+        order = np.lexsort((vids, vd2[i]))[:k]
+        out_d[i, : order.shape[0]] = vd2[i][order]
+        out_i[i, : order.shape[0]] = vids[order]
+    return out_d, out_i
+
+
+def aggregate_oracle(queries: np.ndarray, rects: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Float64 aggregate reference: ``(counts (Q,) i32, sums (Q, 3) f64
+    [Σ(x0+x1), Σ(y0+y1), Σ area], bbox (Q, 4) i32 EMPTY-oriented)``.
+
+    The engines' f32 on-fabric sums must match within ``AGG_RTOL`` /
+    ``AGG_ATOL``; counts and bbox must match exactly.
+    """
+    q = np.asarray(queries, dtype=np.int32)
+    r = np.asarray(rects, dtype=np.int64)    # pallint: disable=PL109
+    hit = overlap_matrix(q, rects)
+    counts = hit.sum(axis=1).astype(np.int32)
+    rf = r.astype(np.float64)
+    cx = rf[:, 0] + rf[:, 2]
+    cy = rf[:, 1] + rf[:, 3]
+    area = (rf[:, 2] - rf[:, 0]) * (rf[:, 3] - rf[:, 1])
+    sums = np.stack([
+        np.where(hit, cx[None, :], 0.0).sum(axis=1),
+        np.where(hit, cy[None, :], 0.0).sum(axis=1),
+        np.where(hit, area[None, :], 0.0).sum(axis=1),
+    ], axis=1)
+    ri = np.asarray(rects, dtype=np.int32)
+    bbox = np.stack([
+        np.where(hit, ri[:, 0][None, :], _INT32_MAX).min(axis=1),
+        np.where(hit, ri[:, 1][None, :], _INT32_MAX).min(axis=1),
+        np.where(hit, ri[:, 2][None, :], _INT32_MIN).max(axis=1),
+        np.where(hit, ri[:, 3][None, :], _INT32_MIN).max(axis=1),
+    ], axis=1).astype(np.int32)
+    return counts, sums, bbox

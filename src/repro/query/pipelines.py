@@ -1,0 +1,288 @@
+"""SPMD step factories and batch plumbing for the query surface.
+
+One factory, four kinds.  :func:`make_kind_step` builds a jitted shard_map
+step with the *same* operand signature for every kind and both engines::
+
+    step(leaf_coords, leaf_ids, rect_tile_mbrs, cover_mbrs, payload)
+
+— leaf coordinates sharded over all mesh axes (axis 1 of the (4, N)
+layout), source IDs sharded the same way on axis 0, tile metadata and
+Phase-1 covers one-row-per-device, and the payload replicated and donated.
+Engines pick the operands; the factory picks the math.  Kinds that don't
+need an operand (aggregate ignores IDs, the distance kinds ignore covers)
+still take it, so the serving layer can cache one operand tuple per engine.
+
+Every payload is a fixed ``(B, 4)`` int32 array so micro-batching, EMPTY
+padding, and donation reuse the count path's plumbing verbatim:
+
+=========  ==================================  ======================
+kind       payload row                         pad row
+=========  ==================================  ======================
+ids        ``[x0, y0, x1, y1]``                EMPTY rect
+knn        ``[x, y, 0, 0]``                    ``[0, 0, 0, 0]``
+radius     ``[x, y, r, 0]``                    ``[0, 0, -1, 0]``
+aggregate  ``[x0, y0, x1, y1]``                EMPTY rect
+=========  ==================================  ======================
+
+(EMPTY rects match nothing; a negative radius marks padding for the radius
+kernel's ``rad >= 0`` gate; kNN pad rows compute a real frontier for the
+origin that the caller slices off.)
+
+Cross-device result combination happens **on fabric**, inside the step —
+never on the host (ids/radius would otherwise need a host gather of
+per-device candidate lists, the exact pattern pallint PL113 bans):
+
+* ids/radius — two passes.  Pass 1 counts locally; a one-hot outer product
+  ``psum`` gathers the (D, B) count table everywhere without an
+  ``all_gather`` dependency, giving each device its exclusive global slot
+  offset (devices hold *contiguous placed slices*, so global result order =
+  device order = placed order).  Pass 2 scatters ``id+1`` into the device's
+  disjoint slot range of the shared (B, kcap) buffer; a final ``psum``
+  merges the disjoint ranges.  Single device skips pass 1 (offsets are 0).
+* knn — per-device (B, k) frontiers are gathered with the same one-hot
+  trick (``jnp.where``-gated, never multiplied: ``0 * inf`` is NaN) and
+  merged by one two-key ``(d2, id)`` sort; the ``INT32_MAX`` sentinel maps
+  to ``-1`` on the way out.
+* aggregate — ``psum`` for counts/sums, ``pmin``/``pmax`` for the bbox.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core.types import EMPTY_RECT
+from repro.kernels import ops
+from repro.query.result import SpatialResult
+
+QUERY_KINDS = ("ids", "knn", "radius", "aggregate")
+
+DEFAULT_KCAP = 64
+
+PAD_ROWS = {
+    "ids": np.asarray(EMPTY_RECT, dtype=np.int32).reshape(4),
+    "aggregate": np.asarray(EMPTY_RECT, dtype=np.int32).reshape(4),
+    "knn": np.zeros(4, dtype=np.int32),
+    "radius": np.array([0, 0, -1, 0], dtype=np.int32),
+}
+
+
+# ------------------------------------------------------------------ payloads
+
+def pack_rects(rects: np.ndarray) -> np.ndarray:
+    """ids/aggregate payload: the validated (Q, 4) rect batch itself."""
+    return np.ascontiguousarray(rects, dtype=np.int32)
+
+
+def pack_knn(points: np.ndarray) -> np.ndarray:
+    """knn payload: (Q, 2) points widened to ``[x, y, 0, 0]`` rows."""
+    q = points.shape[0]
+    out = np.zeros((q, 4), dtype=np.int32)
+    out[:, :2] = points
+    return out
+
+
+def pack_radius(points: np.ndarray, radii: np.ndarray) -> np.ndarray:
+    """radius payload: ``[x, y, r, 0]`` rows."""
+    q = points.shape[0]
+    out = np.zeros((q, 4), dtype=np.int32)
+    out[:, :2] = points
+    out[:, 2] = radii
+    return out
+
+
+def payload_rects(kind: str, payload: np.ndarray) -> np.ndarray:
+    """(Q, 4) rect view of a payload for Morton ordering — point kinds order
+    by the degenerate ``[x, y, x, y]`` rect of the query point."""
+    if kind in ("ids", "aggregate"):
+        return payload
+    return np.concatenate([payload[:, :2], payload[:, :2]], axis=1)
+
+
+# ---------------------------------------------------------------- SPMD steps
+
+def _flat_device_index(mesh: jax.sharding.Mesh) -> jnp.ndarray:
+    """This device's row in axis-major flattened mesh order — the same order
+    ``PartitionSpec(axes)`` assigns shards, so row ``d`` of a sharded operand
+    lives on flat device ``d``."""
+    idx = jnp.int32(0)
+    for a in mesh.axis_names:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _global_offsets(local_counts: jnp.ndarray, axes, didx: jnp.ndarray,
+                    num_devices: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exclusive cross-device offsets + totals without an all_gather.
+
+    One-hot outer product then psum: every device ends up holding the full
+    (D, B) count table, from which its own exclusive prefix (devices with a
+    smaller flat index) and the batch totals are row sums.
+    """
+    dev = jnp.arange(num_devices, dtype=jnp.int32)
+    sel = (dev == didx)[:, None]                       # (D, 1)
+    table = jax.lax.psum(
+        jnp.where(sel, local_counts[None, :], 0), axes)  # (D, B)
+    base = jnp.sum(jnp.where(dev[:, None] < didx, table, 0),
+                   axis=0).astype(jnp.int32)
+    total = jnp.sum(table, axis=0).astype(jnp.int32)
+    return base, total
+
+
+def make_kind_step(
+    mesh: jax.sharding.Mesh,
+    kind: str,
+    *,
+    impl: str = ops.DEFAULT_IMPL,
+    tq: int = 512,
+    tr: int = 1024,
+    kcap: int = DEFAULT_KCAP,
+    k: int = 8,
+    donate_payload: bool = True,
+    on_trace: Callable[[], None] | None = None,
+):
+    """Build the jitted SPMD step for one query kind (see module docstring).
+
+    Returns ``step(coords, ids, rect_tile_mbrs, cover_mbrs, payload)``
+    whose outputs all carry the query axis first, so
+    :func:`repro.core.engine.stream_batches` can concatenate them across
+    micro-batches uniformly:
+
+    =========  =====================================================
+    ids        ``(slots_plus1 (B, kcap) i32, total (B,) i32)``
+    radius     same as ids
+    knn        ``(dists (B, k) f32, ids (B, k) i32, -1 empty)``
+    aggregate  ``(counts (B,) i32, sums (B, 3) f32, bbox (B, 4) i32)``
+    =========  =====================================================
+    """
+    if kind not in QUERY_KINDS:
+        raise ValueError(f"unknown query kind {kind!r}; one of {QUERY_KINDS}")
+    axes = tuple(mesh.axis_names)
+    num_devices = int(np.prod([mesh.shape[a] for a in axes]))
+    p_coords = jax.sharding.PartitionSpec(None, axes)
+    p_meta = jax.sharding.PartitionSpec(axes)
+    p_rep = jax.sharding.PartitionSpec()
+
+    def shard_fn(local_coords, local_ids, local_rmbrs, local_cover, payload):
+        if on_trace is not None:
+            on_trace()
+        cover = local_cover.reshape(-1, 4)
+        rmbrs = local_rmbrs.reshape(-1, 4)
+        rids = local_ids.reshape(-1)
+
+        if kind == "ids":
+            queries = payload
+            if num_devices == 1:
+                base = jnp.zeros((queries.shape[0],), jnp.int32)
+                slots, total = ops.materialize_ids_fused(
+                    queries, local_coords, rids, rmbrs, cover, base,
+                    kcap=kcap, tq=tq, tr=tr, impl=impl)
+                return slots, total
+            local_counts = ops.overlap_counts_fused(
+                queries, local_coords, rmbrs, cover,
+                tq=tq, tr=tr, impl=impl)
+            didx = _flat_device_index(mesh)
+            base, total = _global_offsets(
+                local_counts, axes, didx, num_devices)
+            slots, _ = ops.materialize_ids_fused(
+                queries, local_coords, rids, rmbrs, cover, base,
+                kcap=kcap, tq=tq, tr=tr, impl=impl)
+            return jax.lax.psum(slots, axes), total
+
+        if kind == "radius":
+            pts = payload[:, :2]
+            rad = payload[:, 2]
+            if num_devices == 1:
+                base = jnp.zeros((pts.shape[0],), jnp.int32)
+                slots, total = ops.materialize_radius_fused(
+                    pts, rad, local_coords, rids, rmbrs, base,
+                    kcap=kcap, tq=tq, tr=tr, impl=impl)
+                return slots, total
+            # pass 1: a kcap=1 scatter is the radius count kernel — the
+            # slots output is discarded, only the counts channel is used
+            _, local_counts = ops.materialize_radius_fused(
+                pts, rad, local_coords, rids, rmbrs,
+                jnp.zeros((pts.shape[0],), jnp.int32),
+                kcap=1, tq=tq, tr=tr, impl=impl)
+            didx = _flat_device_index(mesh)
+            base, total = _global_offsets(
+                local_counts, axes, didx, num_devices)
+            slots, _ = ops.materialize_radius_fused(
+                pts, rad, local_coords, rids, rmbrs, base,
+                kcap=kcap, tq=tq, tr=tr, impl=impl)
+            return jax.lax.psum(slots, axes), total
+
+        if kind == "knn":
+            pts = payload[:, :2]
+            dists, idx = ops.knn_fused(
+                pts, local_coords, rids, rmbrs,
+                k=k, tq=tq, tr=tr, impl=impl)
+            if num_devices > 1:
+                didx = _flat_device_index(mesh)
+                dev = jnp.arange(num_devices, dtype=jnp.int32)
+                sel = (dev == didx)[:, None, None]           # (D, 1, 1)
+                # jnp.where, never multiply: empty slots carry inf and
+                # 0 * inf would poison the psum with NaNs
+                gd = jax.lax.psum(
+                    jnp.where(sel, dists[None], jnp.float32(0.0)), axes)
+                gi = jax.lax.psum(jnp.where(sel, idx[None], 0), axes)
+                b = pts.shape[0]
+                dcat = jnp.moveaxis(gd, 0, 1).reshape(b, num_devices * k)
+                icat = jnp.moveaxis(gi, 0, 1).reshape(b, num_devices * k)
+                dists, idx = jax.lax.sort(
+                    (dcat, icat), dimension=1, num_keys=2)
+                dists, idx = dists[:, :k], idx[:, :k]
+            idx = jnp.where(idx == ops.INT32_MAX, -1, idx)
+            return dists, idx
+
+        # aggregate
+        queries = payload
+        counts, sums, bbox = ops.aggregate_fused(
+            queries, local_coords, rmbrs, cover, tq=tq, tr=tr, impl=impl)
+        counts = jax.lax.psum(counts, axes)
+        sums = jax.lax.psum(sums, axes)
+        bbox_min = jax.lax.pmin(bbox[:2], axes)
+        bbox_max = jax.lax.pmax(bbox[2:], axes)
+        bbox = jnp.concatenate([bbox_min, bbox_max], axis=0)
+        return counts, sums.T, bbox.T
+
+    fn = compat.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(p_coords, p_meta, p_meta, p_meta, p_rep),
+        out_specs=(p_rep,) * (3 if kind == "aggregate" else 2),
+        check_vma=False,  # Pallas calls don't carry varying-mesh-axis info
+    )
+    return jax.jit(fn, donate_argnums=(4,) if donate_payload else ())
+
+
+# ------------------------------------------------------------------ assembly
+
+def assemble(kind: str, out, *, kcap: int = DEFAULT_KCAP) -> SpatialResult:
+    """Fold a streamed step output into a :class:`SpatialResult`.
+
+    Decodes the plus-one slot encoding (0 → -1 empty) for the materializing
+    kinds and computes overflow from the true totals; counts valid
+    neighbors for knn; repacks the aggregate triple.
+    """
+    if kind in ("ids", "radius"):
+        slots, total = out
+        ids = np.asarray(slots, dtype=np.int32) - 1
+        total = np.asarray(total, dtype=np.int32)
+        overflow = np.maximum(total - kcap, 0).astype(np.int32)
+        return SpatialResult(kind=kind, count=total, ids=ids,
+                             overflow=overflow)
+    if kind == "knn":
+        dists, ids = out
+        ids = np.asarray(ids, dtype=np.int32)
+        count = (ids >= 0).sum(axis=1).astype(np.int32)
+        return SpatialResult(kind="knn", count=count, ids=ids,
+                             distances=np.asarray(dists, dtype=np.float32))
+    counts, sums, bbox = out
+    return SpatialResult(
+        kind="aggregate", count=np.asarray(counts, dtype=np.int32),
+        aggregates={"sums": np.asarray(sums, dtype=np.float32),
+                    "bbox": np.asarray(bbox, dtype=np.int32)})

@@ -1,0 +1,144 @@
+"""Typed result wrapper for the query surface (DESIGN.md Sec 14).
+
+Every engine query kind returns a :class:`SpatialResult` instead of a bare
+array, because the kinds stop sharing an output shape the moment results are
+materialized: range/radius queries produce *ID lists* with a fixed capacity
+and an overflow account, kNN produces *(distance, ID)* frontiers, aggregates
+produce per-query statistics.  The wrapper keeps the fixed-shape device
+buffers as-is (no ragged host lists on the hot path) and derives the
+user-facing views lazily on the host.
+
+Conventions carried over from the kernels:
+
+* ``ids`` rows are source-rect indices in ascending *placed* order for
+  ``ids``/``radius`` kinds and ascending ``(distance, id)`` order for
+  ``knn``; ``-1`` marks an empty slot.
+* ``count`` is always the *true* total number of matches — when a range or
+  radius query matches more than ``kcap`` rects, ``ids`` holds the first
+  ``kcap`` of them and ``overflow = count - kcap`` records the truncation
+  (never silent).
+* Aggregate sums are float32 on-fabric accumulations; ``centroid`` and
+  ``mean_area`` divide them on the host in float64 and return NaN for
+  queries with zero matches rather than raising.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+KINDS = ("count", "ids", "knn", "radius", "aggregate")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialResult:
+    """One query batch's results for a single query kind.
+
+    Fields are ``None`` when the kind does not produce them:
+
+    ==========  =========  ========================================
+    field       kinds      shape / meaning
+    ==========  =========  ========================================
+    count       all        (Q,) int32 true match totals
+    ids         ids/radius (Q, kcap) int32, -1 empty, placed order
+                knn        (Q, k) int32, (distance, id) order
+    distances   knn        (Q, k) float32 squared distances, inf empty
+    overflow    ids/radius (Q,) int32 matches dropped past kcap
+    aggregates  aggregate  {"sums": (Q, 3) f32, "bbox": (Q, 4) i32}
+    ==========  =========  ========================================
+    """
+
+    kind: str
+    count: np.ndarray
+    ids: np.ndarray | None = None
+    distances: np.ndarray | None = None
+    overflow: np.ndarray | None = None
+    aggregates: dict[str, np.ndarray] | None = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown query kind {self.kind!r}")
+
+    def __len__(self) -> int:
+        return int(self.count.shape[0])
+
+    # ------------------------------------------------------------- id views
+
+    @property
+    def num_queries(self) -> int:
+        return int(self.count.shape[0])
+
+    @property
+    def total_overflow(self) -> int:
+        """Total matches dropped across the batch (0 when kind has no cap)."""
+        if self.overflow is None:
+            return 0
+        return int(self.overflow.sum())
+
+    @property
+    def truncated(self) -> np.ndarray:
+        """(Q,) bool — which queries lost matches to the kcap ceiling."""
+        if self.overflow is None:
+            return np.zeros(self.num_queries, dtype=bool)
+        return self.overflow > 0
+
+    def ids_for(self, i: int) -> np.ndarray:
+        """The materialized IDs of query ``i``, trimmed of empty slots."""
+        if self.ids is None:
+            raise ValueError(f"kind {self.kind!r} has no materialized ids")
+        row = self.ids[i]
+        return row[row >= 0]
+
+    # ------------------------------------------------------ aggregate views
+
+    def _agg(self, key: str) -> np.ndarray:
+        if self.aggregates is None:
+            raise ValueError(f"kind {self.kind!r} has no aggregates")
+        return self.aggregates[key]
+
+    @property
+    def centroid(self) -> np.ndarray:
+        """(Q, 2) float64 mean rect centre; NaN rows where count == 0.
+
+        On-fabric the kernel accumulates ``Σ(x0+x1)`` / ``Σ(y0+y1)``; the
+        centre of rect ``r`` is ``((x0+x1)/2, (y0+y1)/2)``, so the mean
+        centre is the sums over ``2·count``."""
+        sums = self._agg("sums").astype(np.float64)
+        cnt = self.count.astype(np.float64)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            out = sums[:, :2] / (2.0 * cnt[:, None])
+        out[cnt == 0] = np.nan
+        return out
+
+    @property
+    def mean_area(self) -> np.ndarray:
+        """(Q,) float64 mean matched-rect area; NaN where count == 0."""
+        sums = self._agg("sums").astype(np.float64)
+        cnt = self.count.astype(np.float64)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            out = sums[:, 2] / cnt
+        out[cnt == 0] = np.nan
+        return out
+
+    @property
+    def bbox(self) -> np.ndarray:
+        """(Q, 4) int32 bbox of matches (EMPTY orientation when none)."""
+        return self._agg("bbox")
+
+    # ----------------------------------------------------------- conversion
+
+    def to_numpy(self) -> dict[str, Any]:
+        """Plain-array dict view (stable serialization surface)."""
+        out: dict[str, Any] = {"kind": self.kind,
+                               "count": np.asarray(self.count)}
+        if self.ids is not None:
+            out["ids"] = np.asarray(self.ids)
+        if self.distances is not None:
+            out["distances"] = np.asarray(self.distances)
+        if self.overflow is not None:
+            out["overflow"] = np.asarray(self.overflow)
+        if self.aggregates is not None:
+            out["sums"] = np.asarray(self.aggregates["sums"])
+            out["bbox"] = np.asarray(self.aggregates["bbox"])
+        return out

@@ -65,10 +65,10 @@ from typing import Callable, Mapping
 
 import numpy as np
 
-from repro.core.engine import validate_queries
 from repro.kernels import ref
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.query import oracle as qoracle
 from repro.serve import spatial_serve
 
 # Replica lifecycle states (DESIGN.md Sec 13 state machine).
@@ -143,7 +143,8 @@ class Replica:
 
     # -- serving -----------------------------------------------------------
 
-    def submit(self, rect, *, deadline_s: float):
+    def submit(self, rect, *, deadline_s: float, kind: str = "count",
+               radius=None):
         """Forward one request to this replica's server.
 
         The state fence lives here: only an ACTIVE replica accepts work, so
@@ -152,7 +153,8 @@ class Replica:
         if self.state != ACTIVE:
             raise ReplicaUnavailableError(
                 f"replica {self.name!r} is {self.state}, not active")
-        return self.server.submit(rect, deadline_s=deadline_s)
+        return self.server.submit(rect, kind=kind, radius=radius,
+                                  deadline_s=deadline_s)
 
     def note_inflight(self, delta: int) -> None:
         with self._lock:
@@ -242,17 +244,24 @@ class RouterTicket:
     by construction (``_complete`` is guarded), so a late primary and a
     hedge can never both release a result."""
 
-    __slots__ = ("rect", "submit_t", "deadline", "status", "reason", "count",
+    __slots__ = ("rect", "kind", "submit_t", "deadline", "status", "reason",
+                 "count", "ids", "distances", "overflow", "aggregates",
                  "replica", "layout_version", "path", "hedged", "attempts",
                  "latency_s", "_event", "_lock")
 
-    def __init__(self, rect: np.ndarray, submit_t: float, deadline: float):
+    def __init__(self, rect: np.ndarray, submit_t: float, deadline: float,
+                 kind: str = "count"):
         self.rect = rect
+        self.kind = kind
         self.submit_t = submit_t
         self.deadline = deadline
         self.status = spatial_serve.STATUS_PENDING
         self.reason = None
         self.count = None
+        self.ids = None
+        self.distances = None
+        self.overflow = None
+        self.aggregates = None
         self.replica = None
         self.layout_version = None
         self.path = None
@@ -399,26 +408,37 @@ class SpatialRouter:
 
     # -- admission ---------------------------------------------------------
 
-    def submit(self, rect, *, deadline_s: float | None = None) -> RouterTicket:
-        """Admit one range-count request; a worker drives it to completion.
+    def submit(self, rect, *, kind: str = "count", radius=None,
+               deadline_s: float | None = None) -> RouterTicket:
+        """Admit one request; a worker drives it to completion.
 
-        Always returns a ticket; terminal status is ``ok`` (with ``count``)
-        or ``failed`` (with ``reason``) — never silently dropped."""
-        arr = np.asarray(rect)
-        if arr.shape == (4,):
-            arr = arr.reshape(1, 4)
-        validated = validate_queries(
-            arr, strict=True, where="SpatialRouter.submit")[0]
+        ``kind``/``radius`` follow :meth:`SpatialServer.submit` — the same
+        strict per-kind validation runs here, at the routing boundary, so a
+        malformed request is refused before any replica sees it.  Always
+        returns a ticket; terminal status is ``ok`` (with the kind's result
+        fields) or ``failed`` (with ``reason``) — never silently dropped."""
+        payload = spatial_serve.pack_request(
+            rect, kind, radius, where=f"SpatialRouter.submit[{kind}]")
         now = self._clock()
         if deadline_s is None:
             deadline_s = self.config.default_deadline_s
-        task = RouterTicket(validated, now, now + deadline_s)
-        self._requests.inc()
+        task = RouterTicket(payload, now, now + deadline_s, kind=kind)
+        self._requests.inc(query_kind=kind)
         if not self._accepting:
             self._finish(task, reason="stopped")
             return task
         self._pool.submit(self._run_task, task)
         return task
+
+    @staticmethod
+    def _forward(rep: Replica, task: RouterTicket, *, deadline_s: float):
+        """Resubmit a task's packed payload row to one replica in the raw
+        per-kind form the server admission boundary expects."""
+        if task.kind in ("knn", "radius"):
+            radius = int(task.rect[2]) if task.kind == "radius" else None
+            return rep.submit(task.rect[:2], kind=task.kind, radius=radius,
+                              deadline_s=deadline_s)
+        return rep.submit(task.rect, kind=task.kind, deadline_s=deadline_s)
 
     def _run_task(self, task: RouterTicket) -> None:
         try:
@@ -450,7 +470,7 @@ class SpatialRouter:
             task.attempts += 1
             try:
                 budget = task.deadline - self._clock()
-                sub = rep.submit(task.rect, deadline_s=budget)
+                sub = self._forward(rep, task, deadline_s=budget)
             except Exception as e:
                 self._record_failover(rep, type(e).__name__)
                 self._note_routing_failure(rep)
@@ -522,7 +542,7 @@ class SpatialRouter:
             return None, None
         try:
             budget = task.deadline - self._clock()
-            sub = rep.submit(task.rect, deadline_s=budget)
+            sub = self._forward(rep, task, deadline_s=budget)
         except Exception as e:
             self._record_failover(rep, type(e).__name__)
             self._note_routing_failure(rep)
@@ -563,6 +583,8 @@ class SpatialRouter:
         now = self._clock()
         latency = now - task.submit_t
         if task._complete(status=spatial_serve.STATUS_OK, count=sub.count,
+                          ids=sub.ids, distances=sub.distances,
+                          overflow=sub.overflow, aggregates=sub.aggregates,
                           replica=rep.name,
                           layout_version=rep.layout_version,
                           path=sub.path, latency_s=latency):
@@ -586,12 +608,38 @@ class SpatialRouter:
         if not sampled:
             return True
         self._crosschecks.inc()
-        want = int(ref.overlap_counts_np_chunked(
-            task.rect.reshape(1, 4), rep.server._host_rects)[0])
-        if int(sub.count) == want:
+        if self._answer_matches_oracle(task, rep, sub):
             return True
         self._eject(rep, "poisoned")
         return False
+
+    @staticmethod
+    def _answer_matches_oracle(task: RouterTicket, rep: Replica,
+                               sub) -> bool:
+        """Compare one finished server ticket against the replica's host
+        oracle, per kind (integer fields bit-equal, aggregate sums within
+        the documented f32 tolerance)."""
+        kind = task.kind
+        if kind == "count":
+            want = int(ref.overlap_counts_np_chunked(
+                task.rect.reshape(1, 4), rep.server._host_rects)[0])
+            return int(sub.count) == want
+        rows = task.rect.reshape(1, 4)
+        want = rep.server._ref_answer(rows, kind)
+        if kind in ("ids", "radius"):
+            slots, cnt = want
+            return (int(sub.count) == int(cnt[0])
+                    and np.array_equal(sub.ids, slots[0] - 1))
+        if kind == "knn":
+            w_d, w_i = want
+            return (np.array_equal(sub.ids, w_i[0])
+                    and np.array_equal(sub.distances, w_d[0]))
+        cnt, sums, bbox = want              # aggregate
+        return (int(sub.count) == int(cnt[0])
+                and np.array_equal(sub.aggregates["bbox"], bbox[0])
+                and np.allclose(sub.aggregates["sums"], sums[0],
+                                rtol=qoracle.AGG_RTOL,
+                                atol=qoracle.AGG_ATOL))
 
     def _finish(self, task: RouterTicket, *, reason: str) -> None:
         if task._complete(status=STATUS_FAILED, reason=reason,
@@ -751,7 +799,10 @@ class SpatialRouter:
             "layout_version": self.layout_version,
             "replicas": {r.name: r.snapshot() for r in reps},
             "replicas_healthy": int(self._healthy_gauge.value()),
-            "requests": int(self._requests.value()),
+            "requests": int(self._requests.total()),
+            "requests_by_kind": {
+                k: int(v) for k, v in
+                self._requests.as_dict("query_kind").items()},
             "responses_ok": int(self._responses.value(status="ok")),
             "responses_failed": int(self._responses.value(status="failed")),
             "failovers": int(self._failovers.total()),

@@ -42,6 +42,16 @@ headline:
   into the :mod:`repro.obs.trace` tracer when it is enabled (DESIGN.md
   Sec 12).
 
+* **Query kinds** — ``submit(..., kind=...)`` accepts every
+  :data:`SERVE_KINDS` request (count / ids / knn / radius / aggregate) with
+  strict per-kind admission validation.  Each kind gets its own queue and
+  its own single-kind micro-batches (one compiled shape per kind; batches
+  are formed FIFO by oldest queue head), its own lazily compiled step from
+  the engine's :meth:`repro.core.engine.QueryKindMixin.kind_step` cache,
+  per-kind sanity checks and oracle cross-checks
+  (:mod:`repro.query.oracle`), and a per-kind degradation path.  Admitted
+  requests are counted per kind in ``serve_queries_total{query_kind=...}``.
+
 Fault injection for all of the above lives in :mod:`repro.testing.chaos`,
 which wraps the two seams this module exposes (``_step`` — the jitted query
 step, and ``_place`` — batch staging via ``jax.device_put``).
@@ -64,14 +74,21 @@ import numpy as np
 import jax
 
 from repro.core.engine import (
-    EMPTY_RECT, morton_order, validate_queries)
+    EMPTY_RECT, QueryValidationError, morton_order, validate_k,
+    validate_queries, validate_radii)
 from repro.kernels import ref
 from repro.obs import metrics as obs_metrics
 from repro.obs import phases as obs_phases
 from repro.obs import trace as obs_trace
+from repro.query import oracle as qoracle
+from repro.query import pipelines as qp
 
 HEALTHY = "healthy"
 DEGRADED = "degraded"
+
+# every admissible request kind: the count fast path plus the materializing
+# kinds of repro.query (DESIGN.md Sec 14)
+SERVE_KINDS = ("count",) + qp.QUERY_KINDS
 
 STATUS_PENDING = "pending"
 STATUS_OK = "ok"
@@ -97,18 +114,30 @@ class SpatialTicket:
     ``status`` is one of ``ok`` / ``shed`` / ``expired`` / ``cancelled``
     (or ``pending`` until completed); ``path`` records which execution path
     answered (``fast`` or ``ref``), ``reason`` why a request was shed or
-    cancelled."""
+    cancelled.  ``kind`` selects the query kind; ``rect`` holds the packed
+    ``(4,)`` payload row (the rect itself for count/ids/aggregate,
+    ``[x, y, 0, 0]`` for knn, ``[x, y, r, 0]`` for radius).  ``count`` is
+    filled for every kind; ``ids``/``distances``/``overflow``/``aggregates``
+    only where the kind produces them (see
+    :class:`repro.query.SpatialResult`)."""
 
-    __slots__ = ("rect", "submit_t", "deadline", "status", "reason",
-                 "count", "path", "latency_s", "_event")
+    __slots__ = ("rect", "kind", "submit_t", "deadline", "status", "reason",
+                 "count", "ids", "distances", "overflow", "aggregates",
+                 "path", "latency_s", "_event")
 
-    def __init__(self, rect: np.ndarray, submit_t: float, deadline: float):
+    def __init__(self, rect: np.ndarray, submit_t: float, deadline: float,
+                 kind: str = "count"):
         self.rect = rect
+        self.kind = kind
         self.submit_t = submit_t
         self.deadline = deadline
         self.status = STATUS_PENDING
         self.reason = None
         self.count = None
+        self.ids = None
+        self.distances = None
+        self.overflow = None
+        self.aggregates = None
         self.path = None
         self.latency_s = None
         self._event = threading.Event()
@@ -137,6 +166,47 @@ class ServeConfig:
     crosscheck_samples: int = 8
     probe_every: int = 8            # degraded-state fast-path probe cadence
     sort_batches: bool = True       # per-batch Morton ordering
+    # query-kind parameters: one compiled shape per kind, so the per-request
+    # knobs (k, kcap) are server-wide policy, validated at construction
+    knn_k: int = 8
+    kcap: int = qp.DEFAULT_KCAP
+
+
+def pack_request(query, kind: str, radius=None, *,
+                 where: str = "submit") -> np.ndarray:
+    """Strict per-kind admission validation → one packed (4,) payload row.
+
+    Malformed requests are refused, never reinterpreted: unknown kinds, a
+    radius on a non-radius kind, a missing/NaN/negative radius, and
+    wrong-shape queries (rect where a point is expected or vice versa) all
+    raise :class:`repro.core.engine.QueryValidationError`.  Shared by the
+    server and the router so both admission boundaries enforce the same
+    contract."""
+    if kind not in SERVE_KINDS:
+        raise QueryValidationError(
+            f"{where}: unknown query kind (expected one of {SERVE_KINDS})")
+    if kind in ("knn", "radius"):
+        arr = np.asarray(query)
+        if arr.shape == (2,):
+            arr = arr.reshape(1, 2)
+        pt = validate_queries(arr, points=True, strict=True, where=where)
+        if kind == "knn":
+            if radius is not None:
+                raise QueryValidationError(
+                    f"{where}: radius is not a knn parameter")
+            return qp.pack_knn(pt)[0]
+        if radius is None:
+            raise QueryValidationError(
+                f"{where}: radius kind requires a radius")
+        rad = validate_radii(np.asarray([radius]), where=where)
+        return qp.pack_radius(pt, rad)[0]
+    if radius is not None:
+        raise QueryValidationError(
+            f"{where}: radius only applies to the radius kind")
+    arr = np.asarray(query)
+    if arr.shape == (4,):
+        arr = arr.reshape(1, 4)
+    return validate_queries(arr, strict=True, where=where)[0]
 
 
 def _engine_bindings(engine):
@@ -184,9 +254,25 @@ class SpatialServer:
             _engine_bindings(engine))
         self._place = jax.device_put
 
+        # query-kind surface: lazily compiled steps (shared with the
+        # engine's own cache) + host placed arrays for the kind oracles
+        validate_k(self.config.knn_k, where="ServeConfig.knn_k")
+        validate_k(self.config.kcap, where="ServeConfig.kcap")
+        self._kind_supported = hasattr(engine, "kind_step")
+        self._placed_rects = getattr(engine, "placed_rects", None)
+        self._placed_ids = getattr(engine, "placed_ids", None)
+        self._max_id = (int(self._placed_ids.max())
+                        if self._placed_ids is not None
+                        and self._placed_ids.size else -1)
+        self._warm_kinds: set[str] = {"count"}
+        self._pad_rows = dict(qp.PAD_ROWS)
+        self._pad_rows["count"] = np.asarray(
+            EMPTY_RECT, dtype=np.int32).reshape(4)
+
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
-        self._queue: collections.deque[SpatialTicket] = collections.deque()
+        self._queues: dict[str, collections.deque[SpatialTicket]] = {
+            k: collections.deque() for k in SERVE_KINDS}
         self._accepting = True
         self._stop_evt = threading.Event()
         self._thread: threading.Thread | None = None
@@ -204,6 +290,9 @@ class SpatialServer:
         self._events = self.registry.counter(
             "serve_events_total",
             "serving-loop events by kind (submitted/served/shed_*/...)")
+        self._kind_counter = self.registry.counter(
+            "serve_queries_total",
+            "admitted requests by query kind (count/ids/knn/...)")
         self._fault_counter = self.registry.counter(
             "serve_faults_total", "fast-path faults by kind")
         self._health_gauge = self.registry.gauge(
@@ -228,19 +317,30 @@ class SpatialServer:
 
     # ------------------------------------------------------------------ admit
 
-    def submit(self, rect, *, deadline_s: float | None = None) -> SpatialTicket:
-        """Admit one range-count request.  Always returns a ticket; a shed
-        request comes back already completed with ``status='shed'``."""
-        arr = np.asarray(rect)
-        if arr.shape == (4,):
-            arr = arr.reshape(1, 4)
-        validated = validate_queries(
-            arr, strict=True, where="SpatialServer.submit")[0]
+    def _pack_request(self, query, kind: str, radius) -> np.ndarray:
+        where = f"SpatialServer.submit[{kind}]"
+        if kind != "count" and not self._kind_supported:
+            raise QueryValidationError(
+                f"{where}: engine has no query-kind surface")
+        return pack_request(query, kind, radius, where=where)
+
+    def submit(self, rect, *, kind: str = "count", radius=None,
+               deadline_s: float | None = None) -> SpatialTicket:
+        """Admit one request.  Always returns a ticket; a shed request comes
+        back already completed with ``status='shed'``.
+
+        ``kind`` selects the query kind: ``count`` (default, a rect),
+        ``ids``/``aggregate`` (a rect), ``knn`` (an ``[x, y]`` point), or
+        ``radius`` (a point plus ``radius=``).  Per-request ``k``/``kcap``
+        would retrace the one compiled shape, so they are server policy
+        (:class:`ServeConfig.knn_k` / ``kcap``), not submit parameters."""
+        payload = self._pack_request(rect, kind, radius)
         now = self._clock()
         if deadline_s is None:
             deadline_s = self.config.default_deadline_s
-        ticket = SpatialTicket(validated, now, now + deadline_s)
+        ticket = SpatialTicket(payload, now, now + deadline_s, kind=kind)
         self._events.inc(kind="submitted")
+        self._kind_counter.inc(query_kind=kind)
         if deadline_s <= 0:
             # Already expired at submit: shed immediately instead of letting
             # a dead request occupy a batch slot until pump() notices.
@@ -248,15 +348,16 @@ class SpatialServer:
         with self._lock:
             if not self._accepting:
                 return self._shed(ticket, "stopped", now)
-            if len(self._queue) >= self.config.max_queue:
+            depth = sum(len(q) for q in self._queues.values())
+            if depth >= self.config.max_queue:
                 return self._shed(ticket, "capacity", now)
             ewma = self._batch_ewma_s
             if ewma is not None:
-                batches_ahead = len(self._queue) // self.config.batch_size + 1
+                batches_ahead = depth // self.config.batch_size + 1
                 if now + batches_ahead * ewma > ticket.deadline:
                     return self._shed(ticket, "deadline", now)
-            self._queue.append(ticket)
-            self._queue_gauge.set(len(self._queue))
+            self._queues[kind].append(ticket)
+            self._queue_gauge.set(depth + 1)
             self._not_empty.notify()
         return ticket
 
@@ -277,10 +378,11 @@ class SpatialServer:
         cannot be cancelled and keeps its eventual result."""
         with self._lock:
             try:
-                self._queue.remove(ticket)
+                self._queues[ticket.kind].remove(ticket)
             except ValueError:
                 return False
-            self._queue_gauge.set(len(self._queue))
+            self._queue_gauge.set(
+                sum(len(q) for q in self._queues.values()))
         self._events.inc(kind="cancelled")
         obs_trace.event("serve.cancel", reason=reason)
         ticket.status = STATUS_CANCELLED
@@ -293,25 +395,40 @@ class SpatialServer:
     def queue_depth(self) -> int:
         """Current admitted-but-unserved requests (router load signal)."""
         with self._lock:
-            return len(self._queue)
+            return sum(len(q) for q in self._queues.values())
 
     # ------------------------------------------------------------------ serve
 
+    def _next_kind(self) -> str | None:
+        """The kind whose queue head has waited longest (FIFO fairness at
+        batch granularity; each micro-batch is single-kind because each kind
+        has its own compiled shape)."""
+        best = None
+        for kind, q in self._queues.items():
+            if q and (best is None or q[0].submit_t < best[1]):
+                best = (kind, q[0].submit_t)
+        return best[0] if best else None
+
     def pump(self, block: bool = False, timeout: float | None = None) -> int:
-        """Form and serve one micro-batch.  Returns completed requests."""
+        """Form and serve one single-kind micro-batch.  Returns completed
+        requests."""
         cfg = self.config
         taken: list[SpatialTicket] = []
         with self._not_empty:
-            if block and not self._queue:
+            if block and not any(self._queues.values()):
                 self._not_empty.wait(timeout)
-            while self._queue and len(taken) < cfg.batch_size:
-                taken.append(self._queue.popleft())
-            self._queue_gauge.set(len(self._queue))
+            kind = self._next_kind()
+            if kind is not None:
+                q = self._queues[kind]
+                while q and len(taken) < cfg.batch_size:
+                    taken.append(q.popleft())
+            self._queue_gauge.set(
+                sum(len(q) for q in self._queues.values()))
         if not taken:
             return 0
 
         with obs_trace.span("serve.form_batch", phase=obs_phases.HOST,
-                            taken=len(taken)):
+                            taken=len(taken), query_kind=kind):
             now = self._clock()
             live: list[SpatialTicket] = []
             for t in taken:
@@ -331,19 +448,22 @@ class SpatialServer:
             batch = np.stack([t.rect for t in live]).astype(np.int32)
             inv = None
             if cfg.sort_batches and k > 1:
-                order = morton_order(batch)
+                rect_view = (batch if kind == "count"
+                             else qp.payload_rects(kind, batch))
+                order = morton_order(rect_view)
                 inv = np.argsort(order, kind="stable")
                 batch = batch[order]
             pad = cfg.batch_size - k
             if pad:
                 batch = np.concatenate(
-                    [batch, np.tile(self._pad_rect, (pad, 1))])
+                    [batch,
+                     np.tile(self._pad_rows[kind].reshape(1, 4), (pad, 1))])
 
         t0 = self._clock()
-        counts, path = self._execute(batch, k)
+        out, path = self._execute(batch, k, kind)
         dt = self._clock() - t0
         if inv is not None:
-            counts = counts[inv]
+            out = jax.tree_util.tree_map(lambda x: x[inv], out)
 
         done_t = self._clock()
         self._batch_hist.observe(dt)
@@ -352,27 +472,80 @@ class SpatialServer:
             self._batch_ewma_s = (dt if self._batch_ewma_s is None
                                   else 0.8 * self._batch_ewma_s + 0.2 * dt)
             self._served_batches += 1
-        for t, c in zip(live, counts):
+        self._complete_live(live, out, kind, path, done_t)
+        return len(taken)
+
+    def _complete_live(self, live, out, kind, path, done_t) -> None:
+        """Release per-request results from the batch output."""
+        if kind == "count":
+            results = [{"count": int(c)} for c in out]
+        else:
+            res = qp.assemble(kind, out, kcap=self._kind_param(kind) or 0)
+            results = []
+            for i in range(len(live)):
+                fields = {"count": int(res.count[i])}
+                if res.ids is not None:
+                    fields["ids"] = res.ids[i]
+                if res.distances is not None:
+                    fields["distances"] = res.distances[i]
+                if res.overflow is not None:
+                    fields["overflow"] = int(res.overflow[i])
+                if res.aggregates is not None:
+                    fields["aggregates"] = {
+                        "sums": res.aggregates["sums"][i],
+                        "bbox": res.aggregates["bbox"][i]}
+                results.append(fields)
+        for t, fields in zip(live, results):
             t.status = STATUS_OK
-            t.count = int(c)
+            for name, value in fields.items():
+                setattr(t, name, value)
             t.path = path
             t.latency_s = done_t - t.submit_t
             self._req_hist.observe(t.latency_s)
             t._event.set()
-        return len(taken)
 
     def drain(self, timeout: float = 30.0) -> int:
         """Pump until the queue is empty (bounded by ``timeout``)."""
         served = 0
         deadline = self._clock() + timeout
-        while self._queue and self._clock() < deadline:
+        while any(self._queues.values()) and self._clock() < deadline:
             served += self.pump()
         return served
 
     # --------------------------------------------------------------- execute
 
-    def _execute(self, padded: np.ndarray, k: int
-                 ) -> tuple[np.ndarray, str]:
+    def _kind_param(self, kind: str) -> int | None:
+        """The compiled-shape parameter of a kind (k or kcap)."""
+        if kind in ("ids", "radius"):
+            return self.config.kcap
+        if kind == "knn":
+            return self.config.knn_k
+        return None
+
+    def _step_for(self, kind: str):
+        """The jitted step serving ``kind`` — the count path keeps the
+        ``_step`` chaos seam; the query kinds share the engine's lazily
+        compiled per-(kind, param) cache."""
+        if kind == "count":
+            return self._step
+        return self.engine.kind_step(kind, self._kind_param(kind))
+
+    def _warm_kind(self, kind: str, bs: int) -> None:
+        """First-use compilation of a kind step, outside the watchdog (and
+        outside the chaos seams — compilation is not the serving path)."""
+        if kind in self._warm_kinds:
+            return
+        padded = np.tile(self._pad_rows[kind].reshape(1, 4), (bs, 1))
+        staged = jax.device_put(padded, self._rep_sh)
+        step = self._step_for(kind)
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            jax.device_get(step(*self.engine._kind_operands(), staged))
+        self._warm_kinds.add(kind)
+
+    def _execute(self, padded: np.ndarray, k: int, kind: str = "count"
+                 ) -> tuple:
         """Serve one padded batch: fast path with watchdog/retry/cross-check,
         degrading to (and recovering from) the reference path."""
         cfg = self.config
@@ -380,18 +553,25 @@ class SpatialServer:
             self._degraded_batches_since += 1
             if (cfg.probe_every > 0
                     and self._degraded_batches_since % cfg.probe_every == 0):
-                counts = self._probe(padded, k)
-                if counts is not None:
-                    return counts[:k], PATH_FAST
+                out = self._probe(padded, k, kind)
+                if out is not None:
+                    return self._slice_out(out, k, kind), PATH_FAST
             self._events.inc(kind="degraded_batches")
-            return self._ref_counts(padded[:k]), PATH_REF
+            return self._ref_answer(padded[:k], kind), PATH_REF
 
         last: Exception | None = None
+        try:
+            self._warm_kind(kind, padded.shape[0])
+        except Exception as e:      # compile failure: fast path is broken
+            self._record_fault(e)
+            self._degrade(e)
+            self._events.inc(kind="degraded_batches")
+            return self._ref_answer(padded[:k], kind), PATH_REF
         for attempt in range(cfg.max_retries + 1):
             try:
-                counts = self._fast_batch(padded)
-                self._maybe_crosscheck(padded, counts, k)
-                return counts[:k], PATH_FAST
+                out = self._fast_batch(padded, kind)
+                self._maybe_crosscheck(padded, out, k, kind)
+                return self._slice_out(out, k, kind), PATH_FAST
             except Exception as e:          # bounded: max_retries + 1 attempts
                 last = e
                 self._record_fault(e)
@@ -400,19 +580,29 @@ class SpatialServer:
                                     cfg.backoff_cap_s))
         self._degrade(last)
         self._events.inc(kind="degraded_batches")
-        return self._ref_counts(padded[:k]), PATH_REF
+        return self._ref_answer(padded[:k], kind), PATH_REF
 
-    def _fast_batch(self, padded: np.ndarray) -> np.ndarray:
+    @staticmethod
+    def _slice_out(out, k: int, kind: str):
+        if kind == "count":
+            return out[:k]
+        return tuple(x[:k] for x in out)
+
+    def _fast_batch(self, padded: np.ndarray, kind: str = "count"):
         """One watchdog-guarded fast-path attempt: stage → step → retrieve.
 
         The stage/step/retrieve spans open on the guarded *worker* thread,
         so their self-times parent under that thread's ``serve.batch`` span;
         the pump thread deliberately does not wrap its wait on the future —
         that would double-count the same wall time from a second thread."""
+        step = self._step_for(kind)
+        operands = (self._operands if kind == "count"
+                    else self.engine._kind_operands())
 
         def call():
             with obs_trace.span("serve.batch", phase=obs_phases.HOST,
-                                batch_size=int(padded.shape[0])):
+                                batch_size=int(padded.shape[0]),
+                                query_kind=kind):
                 with obs_trace.span("serve.stage", phase=obs_phases.H2D):
                     staged = self._place(padded, self._rep_sh)
                 with warnings.catch_warnings():
@@ -423,13 +613,16 @@ class SpatialServer:
                         message="Some donated buffers were not usable")
                     with obs_trace.span("serve.step",
                                         phase=obs_phases.KERNEL):
-                        out = self._step(*self._operands, staged)
+                        out = step(*operands, staged)
                         if obs_trace.enabled():
                             # only when tracing: charge device time to the
                             # kernel span instead of the retrieve below
                             jax.block_until_ready(out)  # pallint: disable=PL102
                 with obs_trace.span("serve.retrieve", phase=obs_phases.D2H):
-                    return np.asarray(jax.device_get(out))
+                    if kind == "count":
+                        return np.asarray(jax.device_get(out))
+                    return tuple(
+                        np.asarray(x) for x in jax.device_get(out))
 
         # One daemon thread per guarded attempt (not a ThreadPoolExecutor):
         # pool workers are non-daemon and joined at interpreter exit, so a
@@ -447,7 +640,7 @@ class SpatialServer:
         threading.Thread(target=runner, name="serve-step",
                          daemon=True).start()
         try:
-            counts = fut.result(timeout=self.config.watchdog_s)
+            out = fut.result(timeout=self.config.watchdog_s)
         except concurrent.futures.TimeoutError:
             # Abandon the stuck worker (it finishes or dies on its own);
             # the next attempt gets a fresh one — never wait on a straggler.
@@ -455,25 +648,88 @@ class SpatialServer:
                             budget_s=self.config.watchdog_s)
             raise WatchdogTimeout(
                 f"batch exceeded watchdog {self.config.watchdog_s}s") from None
-        self._sanity_check(counts, padded.shape[0])
-        return counts
+        self._sanity_check(out, padded.shape[0], kind)
+        return out
 
-    def _sanity_check(self, counts: np.ndarray, bs: int) -> None:
-        """Cheap full-batch output validation: shape, dtype, count bounds.
+    def _sanity_check(self, out, bs: int, kind: str = "count") -> None:
+        """Cheap full-batch output validation: shape, dtype, value bounds.
         Catches NaN/corrupted kernel output before any response is released."""
         n = self._host_rects.shape[0]
-        if counts.shape != (bs,):
-            raise CorruptOutputError(
-                f"fast path returned shape {counts.shape}, expected ({bs},)")
-        if counts.dtype.kind not in "iu":
-            raise CorruptOutputError(
-                f"fast path returned dtype {counts.dtype}, expected integer")
-        if counts.size and (int(counts.min()) < 0 or int(counts.max()) > n):
-            raise CorruptOutputError(
-                "fast path returned counts outside [0, num_rects]")
 
-    def _maybe_crosscheck(self, padded: np.ndarray, counts: np.ndarray,
-                          k: int) -> None:
+        def counts_ok(counts, what):
+            if counts.shape != (bs,):
+                raise CorruptOutputError(
+                    f"fast path returned {what} shape {counts.shape}, "
+                    f"expected ({bs},)")
+            if counts.dtype.kind not in "iu":
+                raise CorruptOutputError(
+                    f"fast path returned {what} dtype {counts.dtype}, "
+                    "expected integer")
+            if counts.size and (int(counts.min()) < 0
+                                or int(counts.max()) > n):
+                raise CorruptOutputError(
+                    f"fast path returned {what} outside [0, num_rects]")
+
+        if kind == "count":
+            counts_ok(out, "counts")
+            return
+        if kind in ("ids", "radius"):
+            slots, counts = out
+            counts_ok(counts, "totals")
+            kcap = self.config.kcap
+            if slots.shape != (bs, kcap) or slots.dtype.kind not in "iu":
+                raise CorruptOutputError(
+                    f"fast path returned slots {slots.shape} {slots.dtype}")
+            if slots.size and (int(slots.min()) < 0
+                               or int(slots.max()) > self._max_id + 1):
+                raise CorruptOutputError(
+                    "fast path returned IDs outside the placed range")
+            return
+        if kind == "knn":
+            dists, ids = out
+            kk = self.config.knn_k
+            if dists.shape != (bs, kk) or ids.shape != (bs, kk):
+                raise CorruptOutputError(
+                    f"fast path returned knn shapes {dists.shape}/{ids.shape}")
+            if dists.size and (np.isnan(dists).any()
+                               or float(np.nanmin(dists)) < 0.0):
+                raise CorruptOutputError(
+                    "fast path returned NaN/negative knn distances")
+            if ids.size and (int(ids.min()) < -1
+                             or int(ids.max()) > self._max_id):
+                raise CorruptOutputError(
+                    "fast path returned knn IDs outside the placed range")
+            return
+        counts, sums, bbox = out            # aggregate
+        counts_ok(counts, "counts")
+        if sums.shape != (bs, 3) or bbox.shape != (bs, 4):
+            raise CorruptOutputError(
+                f"fast path returned aggregate shapes "
+                f"{sums.shape}/{bbox.shape}")
+        if sums.size and not np.isfinite(sums).all():
+            raise CorruptOutputError(
+                "fast path returned non-finite aggregate sums")
+
+    def _check_against_ref(self, rows: np.ndarray, got, kind: str,
+                           what: str) -> None:
+        """Compare a fast-path sample against the oracle answer; integer
+        leaves must be bit-equal, aggregate sums within the f32 tolerance."""
+        want = self._ref_answer(rows, kind)
+        if kind == "count":
+            ok = np.array_equal(got.astype(np.int32), want)
+        elif kind == "aggregate":
+            ok = (np.array_equal(got[0].astype(np.int32), want[0])
+                  and np.allclose(got[1], want[1], rtol=qoracle.AGG_RTOL,
+                                  atol=qoracle.AGG_ATOL)
+                  and np.array_equal(got[2].astype(np.int32), want[2]))
+        else:
+            ok = all(np.array_equal(g, w) for g, w in zip(got, want))
+        if not ok:
+            raise CorruptOutputError(
+                f"{what} mismatch against the reference oracle")
+
+    def _maybe_crosscheck(self, padded: np.ndarray, out, k: int,
+                          kind: str = "count") -> None:
         """Healthy-state sampled oracle cross-check (silent-corruption net)."""
         cfg = self.config
         if cfg.crosscheck_every <= 0:
@@ -484,22 +740,19 @@ class SpatialServer:
         if m == 0:
             return
         self._events.inc(kind="crosschecks")
-        want = ref.overlap_counts_np_chunked(padded[:m], self._host_rects)
-        if not np.array_equal(counts[:m].astype(np.int32), want):
-            raise CorruptOutputError(
-                "sampled cross-check mismatch against the reference kernel")
+        self._check_against_ref(padded[:m], self._slice_out(out, m, kind),
+                                kind, "sampled cross-check")
 
-    def _probe(self, padded: np.ndarray, k: int) -> np.ndarray | None:
+    def _probe(self, padded: np.ndarray, k: int, kind: str = "count"):
         """Degraded-state recovery probe: one guarded fast-path attempt,
         validated against the reference on a sample before trusting it."""
         self._events.inc(kind="probes")
         try:
-            counts = self._fast_batch(padded)
+            self._warm_kind(kind, padded.shape[0])
+            out = self._fast_batch(padded, kind)
             m = min(k, max(self.config.crosscheck_samples, 1))
-            want = ref.overlap_counts_np_chunked(
-                padded[:m], self._host_rects)
-            if not np.array_equal(counts[:m].astype(np.int32), want):
-                raise CorruptOutputError("probe cross-check mismatch")
+            self._check_against_ref(padded[:m], self._slice_out(out, m, kind),
+                                    kind, "probe cross-check")
         except Exception as e:              # probe failed; stay degraded
             self._record_fault(e)
             return None
@@ -509,11 +762,27 @@ class SpatialServer:
         self._events.inc(kind="recoveries")
         self._health_gauge.set(1.0)
         obs_trace.event("serve.recover")
-        return counts
+        return out
 
-    def _ref_counts(self, queries: np.ndarray) -> np.ndarray:
-        """The degradation path: exact counts from the host rect copy."""
-        return ref.overlap_counts_np_chunked(queries, self._host_rects)
+    def _ref_answer(self, rows: np.ndarray, kind: str = "count"):
+        """The degradation path: exact answers from the host placed copy,
+        in the same raw shape the fast path returns (before assembly)."""
+        if kind == "count":
+            return ref.overlap_counts_np_chunked(rows, self._host_rects)
+        pr, pi = self._placed_rects, self._placed_ids
+        if kind == "ids":
+            w_ids, w_cnt, _ = qoracle.ids_oracle(
+                rows, pr, pi, kcap=self.config.kcap)
+            return (w_ids + 1).astype(np.int32), w_cnt
+        if kind == "radius":
+            w_ids, w_cnt, _ = qoracle.radius_oracle(
+                rows[:, :2], rows[:, 2], pr, pi, kcap=self.config.kcap)
+            return (w_ids + 1).astype(np.int32), w_cnt
+        if kind == "knn":
+            return qoracle.knn_oracle(rows[:, :2], pr, pi,
+                                      k=self.config.knn_k)
+        w_cnt, w_sums, w_bbox = qoracle.aggregate_oracle(rows, pr)
+        return w_cnt, w_sums.astype(np.float32), w_bbox
 
     def _record_fault(self, e: Exception) -> None:
         kind = ("watchdog" if isinstance(e, WatchdogTimeout)
@@ -587,12 +856,14 @@ class SpatialServer:
         construction — see :class:`repro.obs.metrics.Histogram`) instead of
         a re-sorted ring per call."""
         with self._lock:
-            depth = len(self._queue)
+            depth = sum(len(q) for q in self._queues.values())
             health = self.health
             last_fault = self._last_fault
         c = {k: int(v) for k, v in self._events.as_dict("kind").items()}
         faults = {k: int(v)
                   for k, v in self._fault_counter.as_dict("kind").items()}
+        by_kind = {k: int(v) for k, v in
+                   self._kind_counter.as_dict("query_kind").items()}
         submitted = c.get("submitted", 0)
         shed = sum(v for k, v in c.items() if k.startswith("shed_"))
         return {
@@ -610,6 +881,7 @@ class SpatialServer:
             "probes": c.get("probes", 0),
             "crosschecks": c.get("crosschecks", 0),
             "faults": faults,
+            "queries_by_kind": by_kind,
             "last_fault": last_fault,
             "batch_p50_s": self._batch_hist.percentile(50),
             "batch_p90_s": self._batch_hist.percentile(90),

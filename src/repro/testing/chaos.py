@@ -248,10 +248,15 @@ class _HungTicket:
     status = "pending"
     reason = "replica_hang"
     count = None
+    ids = None
+    distances = None
+    overflow = None
+    aggregates = None
     path = None
 
-    def __init__(self, rect):
+    def __init__(self, rect, kind="count"):
         self.rect = rect
+        self.kind = kind
 
     @property
     def done(self) -> bool:
@@ -314,7 +319,7 @@ class ReplicaChaos:
                 raise ReplicaCrashError(
                     f"injected replica crash at submit call {idx} "
                     f"on {replica.name!r}")
-            return _HungTicket(rect)
+            return _HungTicket(rect, kwargs.get("kind", "count"))
 
         replica.submit = chaos_submit
 

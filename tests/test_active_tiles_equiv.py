@@ -1,0 +1,103 @@
+"""Property test: the host and device active-tile builders agree.
+
+``ops.build_active_tiles`` (NumPy, placement time) and
+``ops.build_active_tiles_device`` (jnp, trace-safe serving path) must
+produce identical active sets — same per-query-tile counts and the same
+rect-tile IDs in the same (ascending) order — on any layout, including
+EMPTY-padded tails and adversarially sparse overlap structure.  The two
+builders differ only in list width: the host packs to the observed max,
+the device keeps the static worst case; entries past ``nactive`` are dead
+on both sides and excluded from the comparison.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops
+
+EMPTY = np.array([2**31 - 1, 2**31 - 1, -(2**31), -(2**31)], np.int32)
+
+
+def _rand_mbrs(n, rng, scale, span):
+    lo = rng.integers(0, scale, (n, 2))
+    hi = lo + rng.integers(0, span + 1, (n, 2))
+    return np.concatenate([lo, hi], axis=1).astype(np.int32)
+
+
+def _assert_equivalent(qmbrs, rmbrs):
+    h_n, h_ids = ops.build_active_tiles(qmbrs, rmbrs)
+    d_n, d_ids = ops.build_active_tiles_device(
+        jnp.asarray(qmbrs), jnp.asarray(rmbrs))
+    d_n = np.asarray(d_n)
+    d_ids = np.asarray(d_ids)
+    np.testing.assert_array_equal(h_n, d_n)
+    for i, n in enumerate(h_n):
+        np.testing.assert_array_equal(h_ids[i, :n], d_ids[i, :n])
+
+
+@settings(max_examples=30, deadline=None)
+@given(nq=st.integers(1, 12), nr=st.integers(1, 16),
+       seed=st.integers(0, 2**16), span=st.integers(0, 400))
+def test_active_tiles_host_device_equivalent(nq, nr, seed, span):
+    """Random tile layouts, from dense (huge spans) to nearly disjoint."""
+    rng = np.random.default_rng(seed)
+    _assert_equivalent(_rand_mbrs(nq, rng, 1000, span),
+                       _rand_mbrs(nr, rng, 1000, span))
+
+
+@settings(max_examples=30, deadline=None)
+@given(nq=st.integers(1, 10), nr=st.integers(2, 16),
+       seed=st.integers(0, 2**16), nempty=st.integers(1, 8))
+def test_active_tiles_with_empty_padding(nq, nr, seed, nempty):
+    """EMPTY (lo > hi) rect-tile MBRs — the padded tail of a placed layout —
+    never enter either builder's active set."""
+    rng = np.random.default_rng(seed)
+    rmbrs = _rand_mbrs(nr, rng, 1000, 200)
+    k = min(nempty, nr - 1)
+    rmbrs[nr - k:] = EMPTY
+    _assert_equivalent(_rand_mbrs(nq, rng, 1000, 200), rmbrs)
+
+
+def test_active_tiles_adversarially_sparse():
+    """One distant rect tile per query tile (a diagonal active matrix) plus
+    boundary-touching tiles: the stable-argsort packing must keep ascending
+    tile order on both sides."""
+    n = 8
+    qmbrs = np.stack([np.arange(n) * 10_000,
+                      np.zeros(n, np.int64),
+                      np.arange(n) * 10_000 + 10,
+                      np.full(n, 10)], axis=1).astype(np.int32)
+    # reversed: query tile i overlaps only rect tile n-1-i
+    rmbrs = qmbrs[::-1].copy()
+    _assert_equivalent(qmbrs, rmbrs)
+    # closed-interval touch: rect tile shares exactly one edge coordinate
+    touch = qmbrs.copy()
+    touch[:, 0] = touch[:, 2]                       # degenerate vertical line
+    _assert_equivalent(qmbrs, touch)
+
+
+def test_active_tiles_all_dead():
+    """No overlaps at all: nactive is all-zero and every slot is the masked
+    tile-0 placeholder on both sides."""
+    qmbrs = np.array([[0, 0, 10, 10], [20, 20, 30, 30]], np.int32)
+    rmbrs = np.array([[1000, 1000, 1010, 1010]], np.int32)
+    h_n, h_ids = ops.build_active_tiles(qmbrs, rmbrs)
+    d_n, d_ids = ops.build_active_tiles_device(
+        jnp.asarray(qmbrs), jnp.asarray(rmbrs))
+    assert h_n.tolist() == [0, 0] and np.asarray(d_n).tolist() == [0, 0]
+    assert (h_ids == 0).all() and (np.asarray(d_ids) == 0).all()
+
+
+def test_active_tiles_device_cover_filter():
+    """The device builder's cover filter empties exactly the query tiles
+    that miss every L1 cover MBR."""
+    qmbrs = np.array([[0, 0, 10, 10], [500, 500, 510, 510]], np.int32)
+    rmbrs = np.array([[0, 0, 1000, 1000]], np.int32)
+    covers = np.array([[0, 0, 50, 50]], np.int32)   # hits tile 0 only
+    d_n, _ = ops.build_active_tiles_device(
+        jnp.asarray(qmbrs), jnp.asarray(rmbrs), jnp.asarray(covers))
+    assert np.asarray(d_n).tolist() == [1, 0]

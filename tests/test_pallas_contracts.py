@@ -14,10 +14,15 @@ import pytest
 
 import jax.numpy as jnp
 
+from repro.kernels import aggregate as ka
+from repro.kernels import knn as kk
+from repro.kernels import materialize as km
 from repro.kernels import ops, ref
 from repro.kernels import rect_intersect as rk
+from repro.query import oracle as qoracle
 
 REPO = os.path.join(os.path.dirname(__file__), "..")
+INT32_MAX = 2**31 - 1
 
 # (Q, R) edge shapes against (tq, tr) = (8, 16): single tile exact,
 # non-divisible both sides, sub-tile, and a multi-tile ragged tail.
@@ -94,6 +99,138 @@ def test_twin_overlap_counts_sparse_fused(q, r):
     np.testing.assert_array_equal(got, ref.overlap_counts_np(queries, rects))
 
 
+# --- repro.query kernel twins (materialize / knn / aggregate) --------------
+
+def _placed(rects):
+    """Single-device 'placement': EMPTY-padded rects + aligned source IDs."""
+    rp = ops.pad_rects_to_np(rects, TR)
+    ids = np.full(rp.shape[0], -1, np.int32)
+    ids[: rects.shape[0]] = np.arange(rects.shape[0], dtype=np.int32)
+    return rp, ids, ops.tile_mbrs_np(rp, TR)
+
+
+def _points(n, seed, scale=2000):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, scale, (n, 2)).astype(np.int32)
+
+
+@pytest.mark.parametrize("q,r", EDGE_SHAPES)
+def test_twin_materialize_ids_tiled(q, r):
+    """Pass-2 ID scatter twin: slots bit-equal to the placed-order oracle,
+    including overflow saturation at a tight Kcap."""
+    queries, rects = _rand(q, seed=q * 23 + r), _rand(r, seed=q + r * 9)
+    rp, ids, rmbrs = _placed(rects)
+    qp = ops.pad_rects_to_np(queries, TQ)
+    kcap = 4    # tight: random overlaps overflow it at the larger shapes
+    slots, counts = km.materialize_ids_tiled(
+        jnp.asarray(qp.T), jnp.asarray(rp.T), jnp.asarray(ids),
+        jnp.asarray(ops.tile_mbrs_np(qp, TQ)), jnp.asarray(rmbrs),
+        jnp.asarray(_cover(rects)), jnp.zeros(qp.shape[0], jnp.int32),
+        kcap=kcap, tq=TQ, tr=TR, interpret=True)
+    w_ids, w_cnt, w_over = qoracle.ids_oracle(queries, rp, ids, kcap=kcap)
+    np.testing.assert_array_equal(np.asarray(slots)[:q] - 1, w_ids)
+    np.testing.assert_array_equal(np.asarray(counts)[:q], w_cnt)
+    # saturation: true totals exceed kcap exactly where the oracle says
+    assert (np.asarray(counts)[:q] - kcap).clip(min=0).tolist() \
+        == w_over.tolist()
+
+
+@pytest.mark.parametrize("q,r", EDGE_SHAPES)
+def test_twin_materialize_radius_tiled(q, r):
+    queries, rects = _points(q, seed=q * 29 + r), _rand(r, seed=q + r * 31)
+    radii = np.random.default_rng(q * 37 + r).integers(
+        0, 500, q).astype(np.int32)
+    rp, ids, rmbrs = _placed(rects)
+    pp = np.asarray(ops._pad_points(jnp.asarray(queries), TQ))
+    radp = np.full(pp.shape[0], -1, np.int32)
+    radp[:q] = radii
+    slots, counts = km.materialize_radius_tiled(
+        jnp.asarray(pp.T), jnp.asarray(radp), jnp.asarray(rp.T),
+        jnp.asarray(ids), ops._point_tile_mbrs(jnp.asarray(pp.T), TQ),
+        jnp.asarray(rmbrs), jnp.zeros(pp.shape[0], jnp.int32),
+        kcap=8, tq=TQ, tr=TR, interpret=True)
+    w_ids, w_cnt, _ = qoracle.radius_oracle(queries, radii, rp, ids, kcap=8)
+    np.testing.assert_array_equal(np.asarray(slots)[:q] - 1, w_ids)
+    np.testing.assert_array_equal(np.asarray(counts)[:q], w_cnt)
+
+
+def test_twin_radius_boundary_touching():
+    """Closed-ball contract: a point exactly r away from the rect edge is IN
+    (d2 == r*r bit-equal in f32), one unit farther is OUT."""
+    rects = np.array([[100, 100, 200, 200]], np.int32)
+    rp, ids, rmbrs = _placed(rects)
+    r = 75
+    pts = np.array([[100 - r, 150],        # exactly on the ball boundary
+                    [100 - r - 1, 150],    # one unit outside
+                    [100, 100 - r]], np.int32)
+    radii = np.full(3, r, np.int32)
+    pp = np.asarray(ops._pad_points(jnp.asarray(pts), TQ))
+    radp = np.full(pp.shape[0], -1, np.int32)
+    radp[:3] = radii
+    slots, counts = km.materialize_radius_tiled(
+        jnp.asarray(pp.T), jnp.asarray(radp), jnp.asarray(rp.T),
+        jnp.asarray(ids), ops._point_tile_mbrs(jnp.asarray(pp.T), TQ),
+        jnp.asarray(rmbrs), jnp.zeros(pp.shape[0], jnp.int32),
+        kcap=4, tq=TQ, tr=TR, interpret=True)
+    np.testing.assert_array_equal(np.asarray(counts)[:3], [1, 0, 1])
+    w_ids, w_cnt, _ = qoracle.radius_oracle(pts, radii, rp, ids, kcap=4)
+    np.testing.assert_array_equal(np.asarray(slots)[:3] - 1, w_ids)
+    np.testing.assert_array_equal(np.asarray(counts)[:3], w_cnt)
+
+
+@pytest.mark.parametrize("q,r", EDGE_SHAPES)
+def test_twin_knn_tiled(q, r):
+    pts, rects = _points(q, seed=q * 41 + r), _rand(r, seed=q + r * 43)
+    rp, ids, rmbrs = _placed(rects)
+    k = 4
+    pp = np.asarray(ops._pad_points(jnp.asarray(pts), TQ))
+    dists, got_ids = kk.knn_tiled(
+        jnp.asarray(pp.T), jnp.asarray(rp.T), jnp.asarray(ids),
+        ops._point_tile_mbrs(jnp.asarray(pp.T), TQ), jnp.asarray(rmbrs),
+        k=k, tq=TQ, tr=TR, interpret=True)
+    w_d, w_i = qoracle.knn_oracle(pts, rp, ids, k=k)
+    gi = np.asarray(got_ids)[:q]
+    np.testing.assert_array_equal(np.where(gi == INT32_MAX, -1, gi), w_i)
+    np.testing.assert_array_equal(np.asarray(dists)[:q], w_d)
+
+
+def test_twin_knn_ties_broken_by_id():
+    """Identical rects at identical distance: the k slots fill in ascending
+    source-ID order, bit-equal with the oracle's (d2, id) lexsort."""
+    rect = [100, 100, 120, 120]
+    rects = np.array([rect] * 5, np.int32)
+    rp, ids, rmbrs = _placed(rects)
+    pts = np.array([[50, 110], [110, 110]], np.int32)
+    pp = np.asarray(ops._pad_points(jnp.asarray(pts), TQ))
+    dists, got_ids = kk.knn_tiled(
+        jnp.asarray(pp.T), jnp.asarray(rp.T), jnp.asarray(ids),
+        ops._point_tile_mbrs(jnp.asarray(pp.T), TQ), jnp.asarray(rmbrs),
+        k=3, tq=TQ, tr=TR, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_ids)[:2],
+                                  [[0, 1, 2], [0, 1, 2]])
+    w_d, w_i = qoracle.knn_oracle(pts, rp, ids, k=3)
+    np.testing.assert_array_equal(np.asarray(got_ids)[:2], w_i)
+    np.testing.assert_array_equal(np.asarray(dists)[:2], w_d)
+
+
+@pytest.mark.parametrize("q,r", EDGE_SHAPES)
+def test_twin_aggregate_tiled(q, r):
+    """Counts and bbox bit-equal; f32 on-fabric sums within the documented
+    tolerance of the float64 oracle."""
+    queries, rects = _rand(q, seed=q * 47 + r), _rand(r, seed=q + r * 53)
+    rp, _, rmbrs = _placed(rects)
+    qp = ops.pad_rects_to_np(queries, TQ)
+    counts, sums, bbox = ka.aggregate_tiled(
+        jnp.asarray(qp.T), jnp.asarray(rp.T),
+        jnp.asarray(ops.tile_mbrs_np(qp, TQ)), jnp.asarray(rmbrs),
+        jnp.asarray(_cover(rects)), tq=TQ, tr=TR, interpret=True)
+    w_cnt, w_sums, w_bbox = qoracle.aggregate_oracle(queries, rp)
+    np.testing.assert_array_equal(np.asarray(counts)[:q], w_cnt)
+    np.testing.assert_array_equal(np.asarray(bbox).T[:q], w_bbox)
+    np.testing.assert_allclose(np.asarray(sums).T[:q], w_sums,
+                               rtol=qoracle.AGG_RTOL, atol=qoracle.AGG_ATOL)
+
+
 @pytest.mark.parametrize("impl", ["pallas", "sparse", "xla"])
 def test_empty_query_batch(impl):
     """Q == 0 (serving idle tick): every impl returns an empty count vector
@@ -134,6 +271,7 @@ def test_contract_checker_sees_full_coverage():
         [os.path.join(REPO, "src")], [os.path.join(REPO, "tests")])
     names = {w["name"] for w in report["kernel_wrappers"]}
     assert {"overlap_counts_tiled", "overlap_counts_tiled_fused",
-            "overlap_counts_sparse",
-            "overlap_counts_sparse_fused"} <= names
+            "overlap_counts_sparse", "overlap_counts_sparse_fused",
+            "materialize_ids_tiled", "materialize_radius_tiled",
+            "knn_tiled", "aggregate_tiled"} <= names
     assert report["missing"] == [], report["missing"]

@@ -25,8 +25,8 @@ def _rules(src, path=SRC_PATH):
 def test_registry_has_full_catalog():
     ids = set(registry())
     assert {"PL101", "PL102", "PL103", "PL104", "PL105", "PL106", "PL107",
-            "PL108", "PL109", "PL110", "PL111", "PL112", "PC201", "PC202",
-            "PC203", "PC204"} <= ids
+            "PL108", "PL109", "PL110", "PL111", "PL112", "PL113", "PC201",
+            "PC202", "PC203", "PC204"} <= ids
 
 
 # --- PL1xx doctrine rules --------------------------------------------------
@@ -312,6 +312,67 @@ def test_pl112_suppression():
           "    except RuntimeError:    # pallint: disable=PL112\n"
           "        return backup.submit(task)\n")
     assert "PL112" not in _rules(ok, path=SERVE_PATH)
+
+
+QUERY_PATH = "src/repro/query/fake.py"   # fake path inside a query tree
+
+_MASK_D2H = (
+    "import numpy as np\n"
+    "import jax.numpy as jnp\n"
+    "def candidates(queries, rects):\n"
+    "    hit = (queries[:, None, 0] <= rects[None, :, 2])\n"
+    "    return np.asarray(jnp.logical_and(hit, hit))\n"
+)
+
+
+def test_pl113_candidate_mask_d2h():
+    assert "PL113" in _rules(_MASK_D2H, path=QUERY_PATH)
+    # an inline jnp comparison pulled to the host is the same violation
+    cmp = ("import numpy as np\n"
+           "import jax.numpy as jnp\n"
+           "def candidates(q, r):\n"
+           "    return np.asarray(jnp.asarray(q)[:, None] <= r[None, :])\n")
+    assert "PL113" in _rules(cmp, path=QUERY_PATH)
+    # device_get of a bitwise-combined device mask: same violation
+    dget = ("import jax\nimport jax.numpy as jnp\n"
+            "def candidates(a, b):\n"
+            "    return jax.device_get(jnp.asarray(a) & jnp.asarray(b))\n")
+    assert "PL113" in _rules(dget, path=QUERY_PATH)
+
+
+def test_pl113_quiet_on_legit_transfers():
+    # pulling the fixed-size (Q, Kcap) ID buffer is the sanctioned path
+    ids = ("import numpy as np\n"
+           "def retrieve(slots):\n"
+           "    return np.asarray(slots) - 1\n")
+    assert "PL113" not in _rules(ids, path=QUERY_PATH)
+    # pure-NumPy oracles compare on the host by design — no jnp, quiet
+    oracle = ("import numpy as np\n"
+              "def overlap(q, r):\n"
+              "    return np.asarray((q[:, None, 0] <= r[None, :, 2]))\n")
+    assert "PL113" not in _rules(oracle, path=QUERY_PATH)
+    # device masks that *stay* on device are fine
+    on_dev = ("import jax.numpy as jnp\n"
+              "def hits(q, r):\n"
+              "    return jnp.logical_and(q <= r, r >= 0)\n")
+    assert "PL113" not in _rules(on_dev, path=QUERY_PATH)
+
+
+def test_pl113_scoped_to_query_tree():
+    assert "PL113" not in _rules(_MASK_D2H, path=SRC_PATH)
+    assert "PL113" not in _rules(_MASK_D2H, path=SERVE_PATH)
+    assert "PL113" not in _rules(_MASK_D2H, path=TEST_PATH)
+
+
+def test_pl113_suppression():
+    ok = (
+        "import numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "def candidates(q, r):\n"
+        "    hit = jnp.asarray(q)[:, None] <= r[None, :]\n"
+        "    return np.asarray(hit)    # pallint: disable=PL113\n"
+    )
+    assert "PL113" not in _rules(ok, path=QUERY_PATH)
 
 
 def test_file_level_suppression():

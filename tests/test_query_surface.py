@@ -1,0 +1,470 @@
+"""End-to-end query-surface tests: repro.query through both engines and the
+serving stack.
+
+All four query kinds (ids / knn / radius / aggregate) must be NumPy-oracle
+exact — bit-equal IDs, counts, overflow, distances, and bboxes; aggregate
+sums within the documented float tolerance — on the Broadcast AND Subtree
+engines, through the offline ``stream_batches`` path (``query_*`` methods)
+AND through ``SpatialServer`` per-kind micro-batching and the router.
+Multi-device SPMD variants run in a subprocess with 8 fake host devices.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import compat
+from repro.core import rtree
+from repro.core.engine import BroadcastEngine, QueryValidationError
+from repro.core.subtree import SubtreeEngine
+from repro.data import spider
+from repro.kernels import ref
+from repro.query import oracle
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+N_RECTS = 3000
+Q = 220
+KCAP = 16
+K = 5
+
+
+def _mesh1():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rects = spider.uniform(N_RECTS, seed=3)
+    rng = np.random.default_rng(7)
+    queries = spider.uniform(Q, seed=11, max_size=0.02)
+    points = rng.integers(0, spider.SCALE, (Q, 2)).astype(np.int32)
+    radii = rng.integers(0, 60_000, Q).astype(np.int32)
+    tree = rtree.build_str_3level(rects, leaf_capacity=32, fanout=8)
+    return rects, queries, points, radii, tree
+
+
+def _engine(kind, workload, **kw):
+    rects, _, _, _, tree = workload
+    mesh = _mesh1()
+    if kind == "broadcast":
+        return BroadcastEngine(tree, mesh, batch_size=64, **kw)
+    return SubtreeEngine(rects, mesh, leaf_capacity=64, batch_size=64, **kw)
+
+
+def _check_all_kinds(eng, workload):
+    rects, queries, points, radii, _ = workload
+    pr, pi = eng.placed_rects, eng.placed_ids
+    # placement sanity: placed IDs are a permutation with matching coords
+    live = pi >= 0
+    assert np.array_equal(np.sort(pi[live]), np.arange(rects.shape[0]))
+    assert np.array_equal(pr[live][np.argsort(pi[live])], rects)
+
+    res = eng.query_ids(queries, kcap=KCAP)
+    w_ids, w_cnt, w_ov = oracle.ids_oracle(queries, pr, pi, kcap=KCAP)
+    np.testing.assert_array_equal(res.count, w_cnt)
+    np.testing.assert_array_equal(res.ids, w_ids)
+    np.testing.assert_array_equal(res.overflow, w_ov)
+    assert res.total_overflow == int(w_ov.sum())
+
+    res = eng.query_knn(points, k=K)
+    w_d, w_i = oracle.knn_oracle(points, pr, pi, k=K)
+    np.testing.assert_array_equal(res.ids, w_i)
+    np.testing.assert_array_equal(res.distances, w_d)
+
+    res = eng.query_radius(points, radii, kcap=KCAP)
+    w_ids, w_cnt, w_ov = oracle.radius_oracle(points, radii, pr, pi,
+                                              kcap=KCAP)
+    np.testing.assert_array_equal(res.count, w_cnt)
+    np.testing.assert_array_equal(res.ids, w_ids)
+    np.testing.assert_array_equal(res.overflow, w_ov)
+
+    res = eng.query_aggregate(queries)
+    w_cnt, w_sums, w_bbox = oracle.aggregate_oracle(queries, pr)
+    np.testing.assert_array_equal(res.count, w_cnt)
+    np.testing.assert_array_equal(res.bbox, w_bbox)
+    np.testing.assert_allclose(res.aggregates["sums"], w_sums,
+                               rtol=oracle.AGG_RTOL, atol=oracle.AGG_ATOL)
+    # centroid: NaN on zero-hit queries, Σ(lo+hi)/2n elsewhere
+    cen = res.centroid
+    zero = w_cnt == 0
+    assert np.all(np.isnan(cen[zero]))
+    np.testing.assert_allclose(
+        cen[~zero], w_sums[~zero, :2] / (2.0 * w_cnt[~zero, None]), rtol=1e-5)
+
+
+@pytest.mark.parametrize("engine_kind", ["broadcast", "subtree"])
+def test_all_kinds_oracle_exact(engine_kind, workload):
+    _check_all_kinds(_engine(engine_kind, workload, impl="xla"), workload)
+
+
+@pytest.mark.parametrize("engine_kind", ["broadcast", "subtree"])
+def test_all_kinds_oracle_exact_pallas(engine_kind, workload):
+    _check_all_kinds(_engine(engine_kind, workload, impl="pallas"), workload)
+
+
+def test_overflow_saturates_at_kcap(workload):
+    """A kcap far below the densest query's count: the slot buffer holds the
+    first kcap placed IDs and the remainder is accounted, never dropped
+    silently."""
+    _, queries, _, _, _ = workload
+    eng = _engine("broadcast", workload, impl="xla")
+    res = eng.query_ids(queries, kcap=2)
+    w_ids, w_cnt, w_ov = oracle.ids_oracle(
+        queries, eng.placed_rects, eng.placed_ids, kcap=2)
+    np.testing.assert_array_equal(res.ids, w_ids)
+    np.testing.assert_array_equal(res.overflow, w_ov)
+    assert (res.count > 2).any()                 # the cap actually bites
+    np.testing.assert_array_equal(res.overflow,
+                                  np.maximum(res.count - 2, 0))
+
+
+# ----------------------------------------------------------- validation edge
+
+def test_engine_rejects_bad_points(workload):
+    eng = _engine("broadcast", workload)
+    with pytest.raises(QueryValidationError):
+        eng.query_knn(np.zeros((3, 4), np.int32), k=3)      # rects, not points
+    with pytest.raises(QueryValidationError):
+        eng.query_knn(np.array([[0.5, 1.5]]), k=3)          # fractional
+    with pytest.raises(QueryValidationError):
+        eng.query_knn(np.array([[np.nan, 0.0]]), k=3)       # NaN coordinate
+
+
+def test_engine_rejects_bad_k_and_radii(workload):
+    eng = _engine("broadcast", workload)
+    pts = np.array([[10, 10]], np.int32)
+    for k in (0, -1, 2.5, "many"):
+        with pytest.raises(QueryValidationError):
+            eng.query_knn(pts, k=k)
+    with pytest.raises(QueryValidationError):
+        eng.query_radius(pts, np.array([np.nan]))
+    with pytest.raises(QueryValidationError):
+        eng.query_radius(pts, np.array([-3], np.int32))
+    with pytest.raises(QueryValidationError):
+        eng.query_radius(pts, np.array([1, 2], np.int32))   # length mismatch
+    with pytest.raises(QueryValidationError):
+        eng.query_ids(np.zeros((1, 4), np.int32), kcap=0)
+
+
+def test_empty_batches_all_kinds(workload):
+    eng = _engine("broadcast", workload)
+    res = eng.query_ids(np.zeros((0, 4), np.int32), kcap=4)
+    assert res.ids.shape == (0, 4) and res.count.shape == (0,)
+    res = eng.query_knn(np.zeros((0, 2), np.int32), k=3)
+    assert res.ids.shape == (0, 3) and res.distances.shape == (0, 3)
+    res = eng.query_radius(np.zeros((0, 2), np.int32),
+                           np.zeros((0,), np.int32), kcap=4)
+    assert res.ids.shape == (0, 4)
+    res = eng.query_aggregate(np.zeros((0, 4), np.int32))
+    assert res.count.shape == (0,) and res.aggregates["sums"].shape == (0, 3)
+
+
+# ------------------------------------------------------------------- serving
+
+def _serve_pair(workload, **cfg_kw):
+    from repro.serve.spatial_serve import ServeConfig, SpatialServer
+
+    eng = _engine("broadcast", workload, impl="xla")
+    cfg = ServeConfig(batch_size=16, kcap=KCAP, knn_k=K, **cfg_kw)
+    return eng, SpatialServer(eng, cfg)
+
+
+def test_server_mixed_kind_micro_batching(workload):
+    """All five kinds interleaved through one server: per-kind batches form
+    FIFO, every ticket comes back fast-path and oracle-exact."""
+    _, queries, points, radii, _ = workload
+    eng, srv = _serve_pair(workload, crosscheck_every=1,
+                           crosscheck_samples=4)
+    pr, pi = eng.placed_rects, eng.placed_ids
+    n = 24
+    tickets = []
+    try:
+        for i in range(n):
+            tickets.append(("count", srv.submit(queries[i], deadline_s=30)))
+            tickets.append(("ids", srv.submit(
+                queries[i], kind="ids", deadline_s=30)))
+            tickets.append(("knn", srv.submit(
+                points[i], kind="knn", deadline_s=30)))
+            tickets.append(("radius", srv.submit(
+                points[i], kind="radius", radius=int(radii[i]),
+                deadline_s=30)))
+            tickets.append(("aggregate", srv.submit(
+                queries[i], kind="aggregate", deadline_s=30)))
+        assert srv.drain(timeout=120)
+    finally:
+        srv.stop()
+
+    w_counts = ref.overlap_counts_np_chunked(queries[:n], srv._host_rects)
+    w_ids, w_icnt, w_ov = oracle.ids_oracle(queries[:n], pr, pi, kcap=KCAP)
+    w_d, w_ki = oracle.knn_oracle(points[:n], pr, pi, k=K)
+    w_rids, w_rcnt, w_rov = oracle.radius_oracle(
+        points[:n], radii[:n], pr, pi, kcap=KCAP)
+    w_acnt, w_sums, w_bbox = oracle.aggregate_oracle(queries[:n], pr)
+
+    idx = {k: 0 for k in ("count", "ids", "knn", "radius", "aggregate")}
+    for kind, t in tickets:
+        i = idx[kind]
+        idx[kind] += 1
+        assert t.status == "ok", (kind, i, t.status, t.reason)
+        assert t.path == "fast", (kind, t.path)
+        if kind == "count":
+            assert t.count == int(w_counts[i])
+        elif kind == "ids":
+            assert t.count == int(w_icnt[i])
+            assert np.array_equal(t.ids, w_ids[i])
+            assert t.overflow == int(w_ov[i])
+        elif kind == "knn":
+            assert np.array_equal(t.ids, w_ki[i])
+            assert np.array_equal(t.distances, w_d[i])
+        elif kind == "radius":
+            assert t.count == int(w_rcnt[i])
+            assert np.array_equal(t.ids, w_rids[i])
+            assert t.overflow == int(w_rov[i])
+        else:
+            assert t.count == int(w_acnt[i])
+            assert np.array_equal(t.aggregates["bbox"], w_bbox[i])
+            np.testing.assert_allclose(
+                t.aggregates["sums"], w_sums[i],
+                rtol=oracle.AGG_RTOL, atol=oracle.AGG_ATOL)
+    m = srv.metrics()
+    assert m["queries_by_kind"] == {k: n for k in idx}
+    assert m["health"] == "healthy"
+
+
+def test_server_rejects_malformed_at_submit(workload):
+    _, queries, points, _, _ = workload
+    _, srv = _serve_pair(workload)
+    bad = [
+        lambda: srv.submit(points[0], kind="knn", radius=3),   # stray radius
+        lambda: srv.submit(points[0], kind="radius"),          # missing
+        lambda: srv.submit(points[0], kind="radius", radius=float("nan")),
+        lambda: srv.submit(points[0], kind="radius", radius=-2),
+        lambda: srv.submit(queries[0], kind="bogus"),
+        lambda: srv.submit(queries[0], kind="knn"),            # rect to knn
+    ]
+    try:
+        for fn in bad:
+            with pytest.raises(QueryValidationError):
+                fn()
+        assert srv.metrics()["queue_depth"] == 0    # nothing enqueued
+    finally:
+        srv.stop()
+
+
+def test_serve_config_validates_k_and_kcap(workload):
+    from repro.serve.spatial_serve import ServeConfig, SpatialServer
+
+    eng = _engine("broadcast", workload)
+    for kw in ({"knn_k": 0}, {"kcap": 0}, {"knn_k": -2}):
+        with pytest.raises(QueryValidationError):
+            SpatialServer(eng, ServeConfig(**kw)).stop()
+
+
+@pytest.mark.chaos
+def test_server_kinds_degrade_and_recover(workload):
+    """Fast path breaks after warmup: every kind degrades to the oracle
+    reference path with exact answers, then a probe on a later kind batch
+    recovers the fast path."""
+    from repro.serve.spatial_serve import PATH_FAST, PATH_REF
+
+    _, queries, points, radii, _ = workload
+    eng, srv = _serve_pair(workload, max_retries=1, backoff_base_s=0.0,
+                           watchdog_s=5.0, probe_every=2, crosscheck_every=0)
+    pr, pi = eng.placed_rects, eng.placed_ids
+    try:
+        # warm every kind while healthy so first-compile isn't the seam
+        for kind in ("ids", "knn", "radius", "aggregate"):
+            q = points[0] if kind in ("knn", "radius") else queries[0]
+            t = srv.submit(
+                q, kind=kind,
+                radius=int(radii[0]) if kind == "radius" else None,
+                deadline_s=30)
+            assert srv.drain(60) and t.status == "ok" and t.path == PATH_FAST
+
+        orig_place = srv._place
+        srv._place = lambda *a, **k: (_ for _ in ()).throw(
+            RuntimeError("device lost"))
+        w_d, w_ki = oracle.knn_oracle(points, pr, pi, k=K)
+        w_rids, w_rcnt, _ = oracle.radius_oracle(points, radii, pr, pi,
+                                                 kcap=KCAP)
+        for i in range(4):
+            tk = srv.submit(points[i], kind="knn", deadline_s=30)
+            tr = srv.submit(points[i], kind="radius", radius=int(radii[i]),
+                            deadline_s=30)
+            assert srv.drain(60)
+            assert tk.status == "ok" and tk.path == PATH_REF
+            assert np.array_equal(tk.ids, w_ki[i])
+            assert np.array_equal(tk.distances, w_d[i])
+            assert tr.status == "ok" and tr.path == PATH_REF
+            assert tr.count == int(w_rcnt[i])
+            assert np.array_equal(tr.ids, w_rids[i])
+        assert srv.health == "degraded"
+
+        srv._place = orig_place
+        recovered = False
+        for i in range(8):
+            t = srv.submit(points[i % 4], kind="knn", deadline_s=30)
+            assert srv.drain(60) and t.status == "ok"
+            assert np.array_equal(t.ids, w_ki[i % 4])
+            recovered = recovered or t.path == PATH_FAST
+        assert recovered and srv.health == "healthy"
+        m = srv.metrics()
+        assert m["degradations"] >= 1 and m["recoveries"] >= 1
+    finally:
+        srv._place = orig_place
+        srv.stop()
+
+
+def test_router_kinds_end_to_end(workload):
+    """Kinds pass through the router: packed payload forwarding, per-kind
+    verify keeps healthy replicas active, per-kind request metrics."""
+    from repro.serve.router import RouterConfig, SpatialRouter
+    from repro.serve.spatial_serve import ServeConfig
+
+    rects, queries, points, radii, tree = workload
+    mesh = _mesh1()
+    router = SpatialRouter(
+        lambda: BroadcastEngine(tree, mesh, batch_size=64, impl="xla"),
+        config=RouterConfig(num_replicas=2, crosscheck_every=1, hedge=False),
+        serve_config=ServeConfig(batch_size=16, kcap=KCAP, knn_k=K,
+                                 crosscheck_every=0),
+    )
+    router.start()
+    try:
+        pr = router.replicas()[0].engine.placed_rects
+        pi = router.replicas()[0].engine.placed_ids
+        n = 8
+        tasks = []
+        for i in range(n):
+            tasks.append(("count", i, router.submit(
+                queries[i], deadline_s=30)))
+            tasks.append(("ids", i, router.submit(
+                queries[i], kind="ids", deadline_s=30)))
+            tasks.append(("knn", i, router.submit(
+                points[i], kind="knn", deadline_s=30)))
+            tasks.append(("radius", i, router.submit(
+                points[i], kind="radius", radius=int(radii[i]),
+                deadline_s=30)))
+            tasks.append(("aggregate", i, router.submit(
+                queries[i], kind="aggregate", deadline_s=30)))
+        for _, _, t in tasks:
+            assert t.wait(60), "router ticket timed out"
+
+        w_counts = ref.overlap_counts_np_chunked(
+            queries[:n], router.replicas()[0].server._host_rects)
+        w_ids, w_icnt, w_ov = oracle.ids_oracle(queries[:n], pr, pi,
+                                                kcap=KCAP)
+        w_d, w_ki = oracle.knn_oracle(points[:n], pr, pi, k=K)
+        w_rids, w_rcnt, _ = oracle.radius_oracle(points[:n], radii[:n],
+                                                 pr, pi, kcap=KCAP)
+        w_acnt, w_sums, w_bbox = oracle.aggregate_oracle(queries[:n], pr)
+        for kind, i, t in tasks:
+            assert t.status == "ok", (kind, i, t.status, t.reason)
+            if kind == "count":
+                assert t.count == int(w_counts[i])
+            elif kind == "ids":
+                assert t.count == int(w_icnt[i])
+                assert np.array_equal(t.ids, w_ids[i])
+                assert t.overflow == int(w_ov[i])
+            elif kind == "knn":
+                assert np.array_equal(t.ids, w_ki[i])
+                assert np.array_equal(t.distances, w_d[i])
+            elif kind == "radius":
+                assert t.count == int(w_rcnt[i])
+                assert np.array_equal(t.ids, w_rids[i])
+            else:
+                assert t.count == int(w_acnt[i])
+                assert np.array_equal(t.aggregates["bbox"], w_bbox[i])
+
+        m = router.metrics()
+        assert m["requests"] == 5 * n
+        assert m["requests_by_kind"] == {
+            k: n for k in ("count", "ids", "knn", "radius", "aggregate")}
+        assert m["crosschecks"] > 0
+        assert all(r.state == "active" for r in router.replicas())
+        with pytest.raises(QueryValidationError):
+            router.submit(points[0], kind="radius")     # missing radius
+    finally:
+        router.stop()
+
+
+# ------------------------------------------------------------- multi-device
+
+_MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro import compat
+    from repro.core import rtree
+    from repro.core.engine import BroadcastEngine
+    from repro.core.subtree import SubtreeEngine
+    from repro.data import spider
+    from repro.query import oracle
+
+    assert jax.device_count() == 8
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
+    rects = spider.gaussian(4000, seed=5)
+    rng = np.random.default_rng(17)
+    Q = 230           # not a batch multiple: exercises the pad/un-pad path
+    queries = spider.uniform(Q, seed=23, max_size=0.02)
+    points = rng.integers(0, spider.SCALE, (Q, 2)).astype(np.int32)
+    radii = rng.integers(0, 60_000, Q).astype(np.int32)
+
+    def check(name, eng):
+        pr, pi = eng.placed_rects, eng.placed_ids
+        live = pi >= 0
+        assert np.array_equal(np.sort(pi[live]), np.arange(rects.shape[0]))
+        res = eng.query_ids(queries, kcap=24)
+        w_ids, w_cnt, w_ov = oracle.ids_oracle(queries, pr, pi, kcap=24)
+        assert np.array_equal(res.count, w_cnt), name
+        assert np.array_equal(res.ids, w_ids), name
+        assert np.array_equal(res.overflow, w_ov), name
+        res = eng.query_knn(points, k=5)
+        w_d, w_i = oracle.knn_oracle(points, pr, pi, k=5)
+        assert np.array_equal(res.ids, w_i), name
+        assert np.array_equal(res.distances, w_d), name
+        res = eng.query_radius(points, radii, kcap=12)
+        w_ids, w_cnt, w_ov = oracle.radius_oracle(
+            points, radii, pr, pi, kcap=12)
+        assert np.array_equal(res.count, w_cnt), name
+        assert np.array_equal(res.ids, w_ids), name
+        res = eng.query_aggregate(queries)
+        w_cnt, w_sums, w_bbox = oracle.aggregate_oracle(queries, pr)
+        assert np.array_equal(res.count, w_cnt), name
+        assert np.array_equal(res.bbox, w_bbox), name
+        np.testing.assert_allclose(res.aggregates["sums"], w_sums,
+                                   rtol=oracle.AGG_RTOL, atol=oracle.AGG_ATOL)
+        print(name, "OK", flush=True)
+
+    tree = rtree.build_str_3level(rects, leaf_capacity=16, fanout=8)
+    check("broadcast", BroadcastEngine(tree, mesh, batch_size=128,
+                                       impl="xla"))
+    check("broadcast-sorted", BroadcastEngine(
+        tree, mesh, batch_size=128, impl="xla", sort_queries=True))
+    check("subtree", SubtreeEngine(rects, mesh, leaf_capacity=16,
+                                   batch_size=128, impl="xla"))
+    print("QUERY_MULTIDEV_OK")
+""")
+
+
+@pytest.mark.slow
+def test_query_kinds_multidevice_8():
+    """8 virtual devices, mesh (4, 2): cross-device offsets, psum slot
+    merges, top-k merge, and aggregate combines — all four kinds
+    oracle-exact, including the Morton-sorted engine."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", _MULTIDEV_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "QUERY_MULTIDEV_OK" in r.stdout

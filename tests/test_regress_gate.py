@@ -88,3 +88,67 @@ def test_gate_and_record_overwrites_on_pass(monkeypatch, tmp_path):
     improved = _report(serving=25.0)
     regress._gate_and_record(improved)
     assert json.loads(path.read_text()) == improved
+
+
+# --- query-surface throughput gate (BENCH_query.json) ----------------------
+
+from benchmarks import query_surface  # noqa: E402
+
+
+def _q_report(ids=400.0, knn=220.0, radius=380.0, aggregate=10_000.0):
+    return {"kinds": [
+        {"kind": "ids", "qps": ids},
+        {"kind": "knn", "qps": knn},
+        {"kind": "radius", "qps": radius},
+        {"kind": "aggregate", "qps": aggregate},
+    ]}
+
+
+def test_query_gate_passes_within_tolerance():
+    base = _q_report(knn=200.0)
+    ok = _q_report(knn=200.0 * 0.70)       # -30%: inside the 35% band
+    assert query_surface.regression_failures(ok, base) == []
+
+
+def test_query_gate_fails_on_throughput_drop():
+    base = _q_report(knn=200.0)
+    bad = _q_report(knn=200.0 * 0.60)      # -40%: outside the band
+    fails = query_surface.regression_failures(bad, base)
+    assert len(fails) == 1 and "query_knn" in fails[0]
+
+
+def test_query_gate_reports_every_failing_kind():
+    base = _q_report()
+    bad = _q_report(ids=1.0, knn=1.0, radius=1.0, aggregate=1.0)
+    assert len(query_surface.regression_failures(bad, base)) == 4
+
+
+def test_query_gate_disabled_without_baseline():
+    assert query_surface.regression_failures(_q_report(ids=0.01), None) == []
+
+
+def test_query_gate_and_record_keeps_baseline_on_fail(monkeypatch, tmp_path):
+    path = tmp_path / "BENCH_query.json"
+    committed = _q_report(ids=1000.0)
+    path.write_text(json.dumps(committed))
+    monkeypatch.setattr(query_surface, "OUT_PATH", str(path))
+    with pytest.raises(SystemExit) as exc:
+        query_surface.gate_and_record(_q_report(ids=10.0))
+    assert "NOT overwritten" in str(exc.value)
+    assert json.loads(path.read_text()) == committed
+    improved = _q_report(ids=2000.0)
+    query_surface.gate_and_record(improved)
+    assert json.loads(path.read_text()) == improved
+
+
+def test_committed_query_baseline_has_all_kinds():
+    """The repo-root BENCH_query.json must cover every query kind with
+    throughput and overflow accounting where the kind can overflow."""
+    base = query_surface.load_baseline()
+    assert base is not None, "BENCH_query.json missing at repo root"
+    rows = {r["kind"]: r for r in base["kinds"]}
+    assert set(rows) == {"ids", "knn", "radius", "aggregate"}
+    assert all(r["qps"] > 0 for r in rows.values())
+    for kind in ("ids", "radius"):
+        assert {"overflow_queries", "overflow_rate",
+                "overflow_ids_total"} <= set(rows[kind])

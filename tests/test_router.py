@@ -142,10 +142,10 @@ def test_rolling_swap_version_fence(workload):
     executes = {}
     orig_execute = spatial_serve.SpatialServer._execute
 
-    def logging_execute(self, padded, k):
+    def logging_execute(self, padded, k, kind="count"):
         executes.setdefault(id(self), set()).add(
             getattr(self, "_version_tag", None))
-        return orig_execute(self, padded, k)
+        return orig_execute(self, padded, k, kind)
 
     router = _router(tree)
     v1 = router.layout_version
@@ -393,8 +393,8 @@ def test_expired_deadline_fails_not_hangs(workload):
 
 
 def test_aggregated_metrics_surface(workload):
-    """One scrape surface: router series unlabeled, per-replica server
-    series tagged replica=<name>, one HELP/TYPE block per metric name."""
+    """One scrape surface: router series labeled by query kind, per-replica
+    server series tagged replica=<name>, one HELP/TYPE block per metric."""
     _, queries, tree, _, _ = workload
     router = _router(tree)
     try:
@@ -402,7 +402,7 @@ def test_aggregated_metrics_surface(workload):
         text = router.prometheus_text()
     finally:
         router.stop()
-    assert "router_requests_total 64" in text
+    assert 'router_requests_total{query_kind="count"} 64' in text
     assert "router_replicas_healthy 2" in text
     assert 'router_replicas{state="active"} 2' in text
     assert 'serve_events_total{kind="served",replica="r0"}' in text
